@@ -1,0 +1,65 @@
+"""Figs. 6/7 analog: DPX function latency and throughput.
+
+Fused (one XLA fusion = Hopper's hardware DPX) vs emulated (optimization
+barriers = pre-Hopper software sequences), across int32/int16, plus the
+DP kernels built on them (tropical matmul, Smith-Waterman).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dpx
+from repro.core.bench import register
+from repro.core.timer import Timing, measure_jitted
+from repro.kernels import ops
+
+RNG = np.random.default_rng(13)
+
+
+@register("dpx_functions", "Figs. 6/7")
+def dpx_functions():
+    rows = []
+    n = 1 << 16
+    for dtype in (jnp.int32, jnp.int16):
+        a = jnp.asarray(RNG.integers(-100, 100, n), dtype)
+        b = jnp.asarray(RNG.integers(-100, 100, n), dtype)
+        c = jnp.asarray(RNG.integers(-100, 100, n), dtype)
+        for name in ("viaddmax", "viaddmax_relu", "vimax3"):
+            tf = measure_jitted(dpx.FUSED[name], (a, b, c),
+                                name=f"fused/{name}/{dtype.__name__}",
+                                warmup=3, reps=8, inner=4)
+            te = measure_jitted(dpx.EMULATED[name], (a, b, c),
+                                name=f"emulated/{name}/{dtype.__name__}",
+                                warmup=3, reps=8, inner=4)
+            tf.derived = te.us_per_call / max(tf.us_per_call, 1e-9)
+            tf.derived_name = "fused_speedup"
+            rows.extend([tf, te])
+    # paper reference: H800 16-bit relu variants up to 13x vs emulation
+    rows.append(Timing("paper/H800/16bit_relu_max_speedup", 0, 0, 1,
+                       derived=13.0))
+    return rows
+
+
+@register("dpx_kernels", "Figs. 6/7 (application)")
+def dpx_kernels():
+    rows = []
+    a = jnp.asarray(RNG.integers(-50, 50, (64, 64)), jnp.int32)
+    b = jnp.asarray(RNG.integers(-50, 50, (64, 64)), jnp.int32)
+    t = measure_jitted(lambda x, y: ops.tropical_matmul(x, y), (a, b),
+                       name="kernel/tropical_matmul_64", warmup=2, reps=5)
+    t.derived = 64 ** 3 / (t.us_per_call * 1e-6) / 1e9
+    t.derived_name = "G_DP_cells_per_s"
+    rows.append(t)
+
+    sa = jnp.asarray(RNG.integers(0, 4, (4, 64)), jnp.int32)
+    sb = jnp.asarray(RNG.integers(0, 4, (4, 64)), jnp.int32)
+    t = measure_jitted(lambda x, y: ops.smith_waterman(x, y), (sa, sb),
+                       name="kernel/smith_waterman_4x64x64", warmup=2,
+                       reps=5)
+    t.derived = 4 * 64 * 64 / (t.us_per_call * 1e-6) / 1e9
+    t.derived_name = "G_DP_cells_per_s"
+    rows.append(t)
+    return rows

@@ -1,0 +1,53 @@
+"""Per-(arch x shape) roofline baseline table from dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and
+prints the single-pod roofline rows consumed by EXPERIMENTS.md
+§Roofline.  If artifacts are missing it recomputes the analytic terms
+directly (no compile needed).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ASSIGNED, SHAPES, get_config
+from repro.core import analytic, hw
+from repro.core.bench import register
+from repro.core.timer import Timing
+
+ART_DIR = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def _cell_rows(arch: str, shape_name: str):
+    path = os.path.join(ART_DIR, f"{arch}__{shape_name}__pod1.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            a = rec["analytic"]
+            return Timing(
+                f"{arch}/{shape_name}/{rec['plan']}",
+                a["step_s"] * 1e6, 0, 1,
+                derived=a["mfu"],
+                derived_name=f"mfu(dom={a['dominant']})")
+    cfg = get_config(arch)
+    cell = analytic.analyze_cell(cfg, SHAPES[shape_name], hw.SINGLE_POD)
+    rf = cell.roofline(hw.SINGLE_POD)
+    return Timing(f"{arch}/{shape_name}/analytic-only",
+                  rf.step_s * 1e6, 0, 1, derived=rf.mfu,
+                  derived_name=f"mfu(dom={rf.dominant})")
+
+
+@register("roofline_baselines", "EXPERIMENTS §Roofline")
+def roofline_table():
+    rows = []
+    for arch in ASSIGNED:
+        for shape_name in SHAPES:
+            try:
+                rows.append(_cell_rows(arch, shape_name))
+            except Exception as e:  # noqa: BLE001
+                rows.append(Timing(f"{arch}/{shape_name}/ERROR:{e}",
+                                   0, 0, 1))
+    return rows

@@ -1,0 +1,27 @@
+"""Benchmark runner: one registered benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [names...]
+
+Prints ``name,us_per_call,derived`` CSV (plus # section markers).
+"""
+
+from __future__ import annotations
+
+import sys
+
+# importing registers every benchmark
+from benchmarks import (async_copy, dpx, dsm, llm_gen, memory,  # noqa: F401
+                        roofline_table, te_layer, te_linear,
+                        tensorcore)
+from repro.core.bench import run_all
+
+
+def main() -> None:
+    names = sys.argv[1:] or None
+    failures = run_all(names)
+    if failures:
+        raise SystemExit(f"{failures} benchmark(s) failed")
+
+
+if __name__ == "__main__":
+    main()

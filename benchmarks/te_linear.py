@@ -1,0 +1,72 @@
+"""Fig. 3/4 analog: te.Linear throughput across sizes and dtypes.
+
+Measured(cpu) wall-clock for fp32/bf16/fp8-emulated linear at N x N,
+plus the v5e model columns: fp8's win is the *memory-bound* regime
+(bytes halve); at compute-bound sizes v5e has no fp8 MXU so the model
+shows parity with bf16 — the honest TPU version of the paper's finding
+that small N loses to conversion overhead and large N wins ~2x on
+Hopper.  Also reports the quantize-overhead fraction (paper Fig. 3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hw, mxu_model
+from repro.core.bench import register
+from repro.core.timer import Timing, measure
+from repro.models.common import init_params
+from repro.te.fp8 import DelayedScalingRecipe
+from repro.te.linear import init_state, linear_reference, te_linear, \
+    te_linear_specs
+
+RNG = np.random.default_rng(5)
+
+
+@register("te_linear", "Fig. 4")
+def te_linear_throughput():
+    rows = []
+    recipe = DelayedScalingRecipe()
+    chip = hw.TPU_V5E
+    for n in (256, 512, 1024):
+        params = init_params(te_linear_specs(n, n),
+                             jax.random.PRNGKey(0))
+        x = jnp.asarray(RNG.standard_normal((n, n)), jnp.bfloat16)
+        flops = 2.0 * n ** 3
+
+        t = measure(lambda: linear_reference(params, x),
+                    name=f"measured(cpu)/bf16/N{n}", warmup=2, reps=5)
+        t.derived = flops / (t.us_per_call * 1e-6) / 1e9
+        t.derived_name = "GFLOPs"
+        rows.append(t)
+
+        st = init_state(recipe)
+        jte = jax.jit(lambda p, s, xx: te_linear(p, s, xx, recipe))
+        _, st = jte(params, st, x)       # warm scales
+        t = measure(lambda: jte(params, st, x),
+                    name=f"measured(cpu)/fp8/N{n}", warmup=2, reps=5)
+        t.derived = flops / (t.us_per_call * 1e-6) / 1e9
+        rows.append(t)
+
+        # v5e model: time = max(compute, memory); fp8 halves bytes
+        for dt, label in (("bfloat16", "bf16"), ("float8_e4m3fn", "fp8")):
+            m = mxu_model.pick_tile(n, n, n, dt, chip)
+            rows.append(Timing(f"model(v5e)/{label}/N{n}", 0.0, 0, 1,
+                               derived=m.predicted_flops_per_s / 1e12,
+                               derived_name="TFLOPs"))
+    # Fig. 3 analog: fraction of te_linear spent in quantize/amax ops
+    n = 512
+    params = init_params(te_linear_specs(n, n), jax.random.PRNGKey(0))
+    x = jnp.asarray(RNG.standard_normal((n, n)), jnp.bfloat16)
+    from repro.te import fp8 as fp8_mod
+    sx = jnp.float32(1.0)
+    tq = measure(lambda: fp8_mod.quantize(x, sx), name="quantize_only",
+                 warmup=2, reps=5)
+    st = init_state(recipe)
+    jte = jax.jit(lambda: te_linear(params, st, x, recipe))
+    tt = measure(jte, name="te_linear_total", warmup=2, reps=5)
+    rows.append(Timing("measured(cpu)/quantize_fraction_N512", 0.0, 0, 1,
+                       derived=2 * tq.us_per_call / tt.us_per_call))
+    return rows

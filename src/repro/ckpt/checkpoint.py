@@ -1,0 +1,126 @@
+"""Async checkpointing: npz shards + manifest, crash-safe restore.
+
+Layout per step:  <dir>/step_<N>/arrays.npz + manifest.json
+The manifest is written *after* the arrays fsync (write-then-rename), so
+a crash mid-save leaves the previous step restorable — the property the
+fault-tolerance tests exercise.  Saves run on a background thread
+(`async_save=True`), gathering to host first so the training loop only
+blocks for the device->host copy.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+def _flatten(tree: Params) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or "float8" in str(arr.dtype) \
+                or str(arr.dtype) == "bfloat16":
+            # npz can't hold ml_dtypes: upcast losslessly; restore
+            # casts back to the tree_like leaf dtype
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def _unflatten(tree_like: Params, arrays: Dict[str, np.ndarray]) -> Params:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = arrays[key]
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ----------------------------------------------------------
+    def save(self, step: int, tree: Params) -> None:
+        host = _flatten(jax.device_get(tree))   # block only for D2H
+        if self.async_save:
+            self.wait()                          # one save in flight max
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host: Dict[str, np.ndarray]) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "keys": sorted(host.keys()),
+            "bytes": int(sum(a.nbytes for a in host.values())),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                    # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like: Params, step: Optional[int] = None
+                ) -> Tuple[int, Params]:
+        step = step if step is not None else self.latest_step()
+        assert step is not None, "no checkpoint found"
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        assert sorted(arrays.keys()) == manifest["keys"], "corrupt ckpt"
+        return step, _unflatten(tree_like, arrays)

@@ -1,0 +1,8 @@
+"""Core dissection library — the paper's primary contribution in JAX.
+
+Measurement (timer/bench) -> hardware model (hw/mxu_model/roofline) ->
+new-feature analogs (dpx/dsm).  Kernels, the TE library, sharding plans
+and the runtime all consume this layer.
+"""
+
+from repro.core import hw  # noqa: F401

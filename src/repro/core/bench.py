@@ -1,0 +1,58 @@
+"""Benchmark registry.
+
+Each paper table/figure is one registered benchmark returning rows of
+``name,us_per_call,derived``.  ``benchmarks/run.py`` iterates the
+registry; individual modules can also be run standalone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import traceback
+from typing import Callable, Dict, List, Optional
+
+from repro.core.timer import Timing
+
+BenchFn = Callable[[], List[Timing]]
+
+_REGISTRY: Dict[str, "Benchmark"] = {}
+
+
+@dataclasses.dataclass
+class Benchmark:
+    name: str
+    paper_ref: str           # e.g. "Table IV"
+    fn: BenchFn
+    tags: tuple = ()
+
+
+def register(name: str, paper_ref: str, tags: tuple = ()):
+    def deco(fn: BenchFn) -> BenchFn:
+        _REGISTRY[name] = Benchmark(name=name, paper_ref=paper_ref, fn=fn,
+                                    tags=tags)
+        return fn
+    return deco
+
+
+def registry() -> Dict[str, Benchmark]:
+    return dict(_REGISTRY)
+
+
+def run_all(names: Optional[List[str]] = None, fail_fast: bool = False) -> int:
+    """Run (a subset of) the registry, printing CSV. Returns #failures."""
+    failures = 0
+    print("name,us_per_call,derived")
+    for bname, bench in _REGISTRY.items():
+        if names and bname not in names:
+            continue
+        print(f"# --- {bname} ({bench.paper_ref}) ---")
+        try:
+            for t in bench.fn():
+                print(t.row())
+        except Exception:  # noqa: BLE001 - report and continue
+            failures += 1
+            print(f"# FAILED {bname}")
+            traceback.print_exc()
+            if fail_fast:
+                raise
+    return failures

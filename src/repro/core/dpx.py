@@ -1,0 +1,182 @@
+"""DPX instruction-set analog for TPU (paper §III-D-1, Figs. 6-7).
+
+Hopper's DPX functions are hardware-fused min/max(+add, +relu) ops used
+by dynamic-programming inner loops (Smith-Waterman, Needleman-Wunsch,
+Viterbi, Floyd-Warshall).  On TPU the same role is played by fused VPU
+vector ops: a single XLA fusion computing max(a+b, c) touches VREGs
+once, while pre-Hopper "software emulation" materializes every
+intermediate.
+
+Two variants of each function:
+  * fused:    one jnp expression; XLA fuses it into one VPU loop.
+  * emulated: identical math with `lax.optimization_barrier` between the
+    add and the compare — the structural analog of running the sequence
+    as separate instructions through memory, which is what the paper's
+    A100/RTX4090 software-emulated DPX does.
+
+The benchmark (benchmarks/dpx.py) sweeps both over int32/int16 to mirror
+Fig. 6/7, where Hopper's 16-bit relu variants show up to 13x speedups.
+
+Everything here is also the primitive layer for kernels/dpx_kernel.py
+(banded Smith-Waterman, tropical matmul).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ----------------------------------------------------------------------
+# fused family (names follow CUDA __vi* intrinsics)
+# ----------------------------------------------------------------------
+
+def viaddmax(a, b, c):
+    """max(a+b, c)  — __viaddmax_s32 / _s16x2."""
+    return jnp.maximum(a + b, c)
+
+
+def viaddmin(a, b, c):
+    """min(a+b, c)  — __viaddmin_s32."""
+    return jnp.minimum(a + b, c)
+
+
+def vibmax(a, b) -> Tuple[jax.Array, jax.Array]:
+    """(max(a,b), a>=b)  — __vibmax_s32 (value + predicate)."""
+    pred = a >= b
+    return jnp.where(pred, a, b), pred
+
+
+def vibmin(a, b) -> Tuple[jax.Array, jax.Array]:
+    pred = a <= b
+    return jnp.where(pred, a, b), pred
+
+
+def vimax3(a, b, c):
+    """max(a,b,c)  — __vimax3_s32."""
+    return jnp.maximum(jnp.maximum(a, b), c)
+
+
+def vimin3(a, b, c):
+    return jnp.minimum(jnp.minimum(a, b), c)
+
+
+def viaddmax_relu(a, b, c):
+    """max(a+b, c, 0)  — __viaddmax_s32_relu (SW local alignment core)."""
+    zero = jnp.zeros((), dtype=jnp.result_type(a)).astype(a.dtype)
+    return jnp.maximum(jnp.maximum(a + b, c), zero)
+
+
+def vimax3_relu(a, b, c):
+    zero = jnp.zeros((), dtype=jnp.result_type(a)).astype(a.dtype)
+    return jnp.maximum(vimax3(a, b, c), zero)
+
+
+# ----------------------------------------------------------------------
+# software-emulated family (pre-Hopper analog: no fusion across steps)
+# ----------------------------------------------------------------------
+
+def _barrier(x):
+    return lax.optimization_barrier(x)
+
+
+def viaddmax_emulated(a, b, c):
+    s = _barrier(a + b)
+    return jnp.maximum(s, c)
+
+
+def viaddmin_emulated(a, b, c):
+    s = _barrier(a + b)
+    return jnp.minimum(s, c)
+
+
+def viaddmax_relu_emulated(a, b, c):
+    s = _barrier(a + b)
+    m = _barrier(jnp.maximum(s, c))
+    zero = jnp.zeros((), dtype=jnp.result_type(a)).astype(a.dtype)
+    return jnp.maximum(m, zero)
+
+
+def vimax3_emulated(a, b, c):
+    m = _barrier(jnp.maximum(a, b))
+    return jnp.maximum(m, c)
+
+
+FUSED: Dict[str, Callable] = {
+    "viaddmax": viaddmax,
+    "viaddmin": viaddmin,
+    "viaddmax_relu": viaddmax_relu,
+    "vimax3": vimax3,
+    "vimax3_relu": vimax3_relu,
+}
+EMULATED: Dict[str, Callable] = {
+    "viaddmax": viaddmax_emulated,
+    "viaddmin": viaddmin_emulated,
+    "viaddmax_relu": viaddmax_relu_emulated,
+    "vimax3": vimax3_emulated,
+    "vimax3_relu": lambda a, b, c: jnp.maximum(vimax3_emulated(a, b, c), 0),
+}
+
+
+# ----------------------------------------------------------------------
+# DP primitives built on the family
+# ----------------------------------------------------------------------
+
+def tropical_matmul(A: jax.Array, B: jax.Array, *, semiring: str = "max_plus"
+                    ) -> jax.Array:
+    """(max,+) or (min,+) matrix product — Floyd-Warshall / Viterbi step.
+
+    C[i,j] = max_k (A[i,k] + B[k,j]).  This is the matmul-shaped DP the
+    DPX unit accelerates; on TPU it runs on the VPU (the MXU only does
+    (+,*)), which is exactly the kind of unit-placement fact the paper's
+    dissection establishes (DPX lives in the SM, one unit per SM).
+    """
+    assert A.shape[-1] == B.shape[-2]
+    red = jnp.max if semiring == "max_plus" else jnp.min
+    # [..., i, k, 1] + [..., 1, k, j] -> reduce over k
+    return red(A[..., :, :, None] + B[..., None, :, :], axis=-2)
+
+
+def smith_waterman(seq_a: jax.Array, seq_b: jax.Array, *,
+                   match: int = 2, mismatch: int = -1, gap: int = -1
+                   ) -> jax.Array:
+    """Local-alignment score matrix via anti-diagonal wavefront.
+
+    Pure-jnp oracle used by kernels/dpx_kernel.py tests.  The inner
+    recurrence is exactly `viaddmax_relu`:
+        H[i,j] = max(H[i-1,j-1]+s, H[i-1,j]+gap, H[i,j-1]+gap, 0)
+    Returns the full H matrix, int32, shape (len_a+1, len_b+1).
+    """
+    la, lb = seq_a.shape[0], seq_b.shape[0]
+    sub = jnp.where(seq_a[:, None] == seq_b[None, :], match, mismatch)
+
+    def diag_step(carry, d):
+        h_prev2, h_prev1 = carry  # anti-diagonals d-2, d-1 (padded to lb+1)
+        i = d - jnp.arange(lb + 1)            # row index per diagonal cell
+        j = jnp.arange(lb + 1)                # col index
+        valid = (i >= 1) & (i <= la) & (j >= 1)
+        si = jnp.clip(i - 1, 0, la - 1)
+        sj = jnp.clip(j - 1, 0, lb - 1)
+        s = sub[si, sj]
+        diag = h_prev2                        # H[i-1,j-1] sits at same j-1 slot
+        diag = jnp.roll(diag, 1)
+        up = h_prev1                          # H[i-1,j] at same j
+        left = jnp.roll(h_prev1, 1)           # H[i,j-1] at j-1
+        h = viaddmax_relu(diag, s, viaddmax(up, gap, left + gap))
+        h = jnp.where(valid, h, 0)
+        return (h_prev1, h), h
+
+    init = (jnp.zeros(lb + 1, jnp.int32), jnp.zeros(lb + 1, jnp.int32))
+    _, diags = lax.scan(diag_step, init, jnp.arange(1, la + lb + 1))
+    # Scatter anti-diagonals back to (i, j) layout.
+    H = jnp.zeros((la + 1, lb + 1), jnp.int32)
+    d_idx = jnp.arange(1, la + lb + 1)
+    j_idx = jnp.arange(lb + 1)
+    ii = d_idx[:, None] - j_idx[None, :]
+    jj = jnp.broadcast_to(j_idx[None, :], ii.shape)
+    ok = (ii >= 0) & (ii <= la)
+    H = H.at[jnp.where(ok, ii, 0), jnp.where(ok, jj, 0)].max(
+        jnp.where(ok, diags, 0))
+    return H

@@ -1,0 +1,148 @@
+"""Hardware specification registry.
+
+The paper dissects three GPUs (A100 / RTX4090 / H800) and derives a
+quantitative hardware model from microbenchmarks.  This module is the TPU
+counterpart: the *target* device is TPU v5e (the roofline constants mandated
+for this repo), and the paper's GPUs are retained so parity tables
+(benchmarks/memory.py, benchmarks/tensorcore.py) can print the published
+numbers next to the TPU-derived ones.
+
+All sustained-rate fields that come out of *our* microbenchmarks live in
+``DissectedModel`` (core/mxu_model.py consumes them); this file holds only
+vendor-published peaks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Peak specification of one accelerator chip."""
+
+    name: str
+    # Peak dense matmul throughput, FLOP/s, by input dtype.
+    peak_flops: Dict[str, float]
+    hbm_bytes: int
+    hbm_gbps: float                 # HBM bandwidth, GB/s (1e9)
+    # On-chip software-managed memory (VMEM for TPU, smem+L2 proxy for GPU).
+    vmem_bytes: int
+    # Inter-chip interconnect, per link, GB/s, and links per chip.
+    ici_gbps_per_link: float
+    ici_links: int
+    # Vector unit: lanes × sublanes (TPU VPU is 8×128).
+    vpu_lanes: int
+    mxu_dim: int                    # systolic array edge (128 for TPU)
+    clock_ghz: float
+    tdp_watts: float
+
+    @property
+    def ici_gbps_total(self) -> float:
+        return self.ici_gbps_per_link * self.ici_links
+
+    def peak_for(self, dtype: str) -> float:
+        """Peak FLOP/s for a matmul with inputs of `dtype` (falls back sanely)."""
+        d = str(dtype)
+        aliases = {
+            "float32": "fp32", "bfloat16": "bf16", "float16": "bf16",
+            "int8": "int8", "float8_e4m3fn": "fp8", "float8_e5m2": "fp8",
+            "fp8_e4m3": "fp8", "fp8_e5m2": "fp8", "tf32": "tf32",
+        }
+        key = aliases.get(d, d)
+        if key in self.peak_flops:
+            return self.peak_flops[key]
+        # No native unit for this dtype: runs at the bf16 rate after upcast
+        # (e.g. fp8 on v5e — stored as fp8, computed as bf16).
+        return self.peak_flops.get("bf16", max(self.peak_flops.values()))
+
+
+# --- TPU v5e: THE roofline target for this repo (constants per assignment) ---
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops={
+        "bf16": 197e12,
+        "fp32": 197e12 / 4,   # fp32 via MXU passes = ~1/4 bf16 rate
+        "int8": 394e12,
+        # v5e has no fp8 MXU mode; fp8 is a storage format (upcast to bf16).
+        "fp8": 197e12,
+    },
+    hbm_bytes=16 * 1024**3,
+    hbm_gbps=819.0,
+    vmem_bytes=128 * 1024**2,
+    ici_gbps_per_link=50.0,
+    ici_links=4,              # 2D torus on v5e: 4 links/chip
+    vpu_lanes=8 * 128,
+    mxu_dim=128,
+    clock_ghz=0.94,
+    tdp_watts=200.0,
+)
+
+# --- The paper's three GPUs (Table III), for parity printing only ---
+A100_PCIE = ChipSpec(
+    name="a100-pcie",
+    peak_flops={"bf16": 312e12, "fp32": 19.5e12, "tf32": 156e12, "int8": 624e12},
+    hbm_bytes=40 * 1024**3, hbm_gbps=1555.0, vmem_bytes=40 * 1024**2,
+    ici_gbps_per_link=64.0, ici_links=1, vpu_lanes=64, mxu_dim=16,
+    clock_ghz=1.41, tdp_watts=250.0,
+)
+H800_PCIE = ChipSpec(
+    name="h800-pcie",
+    peak_flops={"bf16": 756.5e12, "fp32": 51e12, "tf32": 378e12,
+                "int8": 1513e12, "fp8": 1513e12},
+    hbm_bytes=80 * 1024**3, hbm_gbps=2039.0, vmem_bytes=50 * 1024**2,
+    ici_gbps_per_link=50.0, ici_links=8, vpu_lanes=128, mxu_dim=16,
+    clock_ghz=1.755, tdp_watts=350.0,
+)
+RTX4090 = ChipSpec(
+    name="rtx4090",
+    peak_flops={"bf16": 330.3e12, "fp32": 82.6e12, "tf32": 82.6e12,
+                "int8": 660.6e12, "fp8": 660.6e12},
+    hbm_bytes=24 * 1024**3, hbm_gbps=1008.0, vmem_bytes=72 * 1024**2,
+    ici_gbps_per_link=0.0, ici_links=0, vpu_lanes=128, mxu_dim=16,
+    clock_ghz=2.52, tdp_watts=450.0,
+)
+
+CHIPS: Dict[str, ChipSpec] = {
+    c.name: c for c in (TPU_V5E, A100_PCIE, H800_PCIE, RTX4090)
+}
+
+TARGET = TPU_V5E
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """A production mesh of `TARGET` chips.
+
+    `axis_links` says how many ICI links serve collectives on each mesh
+    axis.  On a v5e 16x16 2D torus mapped as (data, model) we give each
+    axis the links of one torus dimension (2: +/- neighbors); the `pod`
+    axis crosses DCN/optical and is modeled at lower bandwidth.
+    """
+
+    shape: tuple
+    axis_names: tuple
+    chip: ChipSpec = TPU_V5E
+    dcn_gbps: float = 25.0   # inter-pod (per-host effective) bandwidth
+
+    @property
+    def num_chips(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def axis_size(self, name: str) -> int:
+        return self.shape[self.axis_names.index(name)]
+
+    def axis_bandwidth_gbps(self, name: str) -> float:
+        """Per-chip bandwidth available to collectives along `name`."""
+        if name == "pod":
+            return self.dcn_gbps
+        # bidirectional ring on one torus dimension: 2 links
+        return 2.0 * self.chip.ici_gbps_per_link
+
+
+SINGLE_POD = MeshSpec(shape=(16, 16), axis_names=("data", "model"))
+MULTI_POD = MeshSpec(shape=(2, 16, 16), axis_names=("pod", "data", "model"))

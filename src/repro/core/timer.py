@@ -1,0 +1,92 @@
+"""Steady-state wall-clock measurement harness.
+
+Mirrors the paper's methodology (III-B-2): explicit warmup, many
+repetitions inside the timed region, and throughput computed from
+wall-time (never from clock-cycle counts, which drift with frequency —
+the paper makes exactly this point for the H800 power limit).
+
+On this CPU host the numbers characterize the host, not the TPU target;
+benchmark tables label them `measured(cpu)` and pair them with modeled
+TPU numbers from core/mxu_model.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+
+@dataclasses.dataclass
+class Timing:
+    name: str
+    us_per_call: float
+    std_us: float
+    reps: int
+    # Optional derived metric, e.g. GFLOP/s or GB/s; filled by callers.
+    derived: Optional[float] = None
+    derived_name: str = ""
+
+    def row(self) -> str:
+        d = f"{self.derived:.3f}" if self.derived is not None else ""
+        return f"{self.name},{self.us_per_call:.3f},{d}"
+
+
+def _block(tree: Any) -> None:
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+        tree,
+    )
+
+
+def measure(
+    fn: Callable[[], Any],
+    *,
+    name: str = "",
+    warmup: int = 3,
+    reps: int = 10,
+    inner: int = 1,
+) -> Timing:
+    """Time `fn` (already arg-bound); returns trimmed-mean microseconds.
+
+    `inner`: calls per timed sample (amortizes dispatch overhead, the
+    wall-clock analog of the paper's 1024-iteration unrolled kernels).
+    """
+    for _ in range(warmup):
+        _block(fn())
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(inner):
+            out = fn()
+        _block(out)
+        t1 = time.perf_counter()
+        samples.append((t1 - t0) / inner * 1e6)
+    samples.sort()
+    trimmed = samples[: max(1, int(len(samples) * 0.8))]  # drop slowest 20%
+    return Timing(
+        name=name,
+        us_per_call=statistics.mean(trimmed),
+        std_us=statistics.pstdev(trimmed) if len(trimmed) > 1 else 0.0,
+        reps=reps,
+    )
+
+
+def measure_jitted(
+    fn: Callable[..., Any],
+    args: Sequence[Any],
+    *,
+    name: str = "",
+    warmup: int = 3,
+    reps: int = 10,
+    inner: int = 1,
+) -> Timing:
+    """jit-compile `fn`, bind `args`, measure steady state."""
+    jfn = jax.jit(fn)
+    _block(jfn(*args))  # compile outside the timed region
+    return measure(lambda: jfn(*args), name=name, warmup=warmup, reps=reps,
+                   inner=inner)

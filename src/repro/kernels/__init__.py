@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's hot spots, with jnp oracles.
+
+matmul (mma/wgmma analog) | fp8_matmul (QGMMA) | flash_attention |
+dpx_kernel (tropical matmul + Smith-Waterman) | async_pipeline (TMA).
+Validated on CPU via interpret=True against ref.py.
+"""

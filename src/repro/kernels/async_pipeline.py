@@ -1,0 +1,102 @@
+"""Async data-movement kernel — the TMA / cp.async analog (paper §III-D-2).
+
+The paper benchmarks `globalToShmemAsyncCopy`: tiled matmul where the
+HBM->shared copies either block the warps ("SyncShare") or run through a
+2-stage async pipeline overlapped with compute ("AsyncPipe").  The TPU
+version uses explicit Pallas DMAs (`pltpu.make_async_copy` — the TPU's
+TMA-equivalent bulk copy engine) from HBM-resident operands into a
+multi-slot VMEM scratch:
+
+  stages=1  — start copy, wait, compute           (SyncShare)
+  stages>=2 — copy k+1 in flight while computing k (AsyncPipe)
+
+benchmarks/async_copy.py sweeps stages x block size to reproduce
+Tables XIII/XIV structurally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pipelined_kernel(a_hbm, b_hbm, o_ref, a_buf, b_buf, acc_ref, sems, *,
+                      bm: int, bn: int, bk: int, nk: int, stages: int):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    def start_copy(k, slot):
+        a_cp = pltpu.make_async_copy(
+            a_hbm.at[pl.ds(i * bm, bm), pl.ds(k * bk, bk)],
+            a_buf.at[slot], sems.at[slot, 0])
+        b_cp = pltpu.make_async_copy(
+            b_hbm.at[pl.ds(k * bk, bk), pl.ds(j * bn, bn)],
+            b_buf.at[slot], sems.at[slot, 1])
+        a_cp.start()
+        b_cp.start()
+
+    def wait_copy(k, slot):
+        pltpu.make_async_copy(
+            a_hbm.at[pl.ds(i * bm, bm), pl.ds(k * bk, bk)],
+            a_buf.at[slot], sems.at[slot, 0]).wait()
+        pltpu.make_async_copy(
+            b_hbm.at[pl.ds(k * bk, bk), pl.ds(j * bn, bn)],
+            b_buf.at[slot], sems.at[slot, 1]).wait()
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if stages == 1:
+        def body(k, _):
+            start_copy(k, 0)
+            wait_copy(k, 0)
+            acc_ref[...] += jnp.dot(a_buf[0], b_buf[0],
+                                    preferred_element_type=jnp.float32)
+            return ()
+        jax.lax.fori_loop(0, nk, body, ())
+    else:
+        start_copy(0, 0)
+
+        def body(k, _):
+            slot = k % stages
+            nxt = (k + 1) % stages
+
+            @pl.when(k + 1 < nk)
+            def _prefetch():
+                start_copy(k + 1, nxt)      # in flight during compute(k)
+
+            wait_copy(k, slot)
+            acc_ref[...] += jnp.dot(a_buf[slot], b_buf[slot],
+                                    preferred_element_type=jnp.float32)
+            return ()
+        jax.lax.fori_loop(0, nk, body, ())
+
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def pipelined_matmul(a: jax.Array, b: jax.Array, *, bm: int = 32,
+                     bn: int = 32, bk: int = 32, stages: int = 2,
+                     interpret: bool = True) -> jax.Array:
+    """C = A @ B with *manual* DMA staging (stages=1 sync, >=2 async)."""
+    m, k = a.shape
+    _, n = b.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_pipelined_kernel, bm=bm, bn=bn, bk=bk, nk=nk,
+                          stages=stages),
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((max(stages, 1), bm, bk), a.dtype),
+            pltpu.VMEM((max(stages, 1), bk, bn), b.dtype),
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.SemaphoreType.DMA((max(stages, 1), 2)),
+        ],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,99 @@
+"""jit'd public wrappers for the kernel suite.
+
+Tile shapes default to the dissection-driven autotuner
+(core/mxu_model.pick_tile) — the paper's measure->model->optimize loop.
+`interpret` defaults to True off-TPU so the whole suite validates on
+this CPU host; on a real TPU backend it compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mxu_model
+from repro.kernels import async_pipeline as _async
+from repro.kernels import dpx_kernel as _dpx
+from repro.kernels import flash_attention as _flash
+from repro.kernels import fp8_matmul as _fp8
+from repro.kernels import matmul as _mm
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp(interpret: Optional[bool]) -> bool:
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def _fit_tiles(m, n, k, bm, bn, bk):
+    """Clamp autotuned tiles to divisors of the problem (even tiling)."""
+    def clamp(dim, t):
+        t = min(t, dim)
+        while dim % t:
+            t //= 2
+        return max(t, 1)
+    return clamp(m, bm), clamp(n, bn), clamp(k, bk)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a, b, *, bm: int = 0, bn: int = 0, bk: int = 0,
+           interpret: Optional[bool] = None):
+    m, k = a.shape
+    n = b.shape[1]
+    if not (bm and bn and bk):
+        t = mxu_model.pick_tile(m, n, k, str(a.dtype))
+        bm, bn, bk = t.bm, t.bn, t.bk
+    bm, bn, bk = _fit_tiles(m, n, k, bm, bn, bk)
+    return _mm.matmul(a, b, bm=bm, bn=bn, bk=bk,
+                      interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def fp8_matmul(aq, bq, sx, sw, *, bm: int = 0, bn: int = 0, bk: int = 0,
+               interpret: Optional[bool] = None):
+    m, k = aq.shape
+    n = bq.shape[1]
+    if not (bm and bn and bk):
+        t = mxu_model.pick_tile(m, n, k, str(aq.dtype))
+        bm, bn, bk = t.bm, t.bn, t.bk
+    bm, bn, bk = _fit_tiles(m, n, k, bm, bn, bk)
+    return _fp8.fp8_matmul(aq, bq, sx, sw, bm=bm, bn=bn, bk=bk,
+                           interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: Optional[bool] = None):
+    return _flash.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                                  interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def tropical_matmul(a, b, *, bm: int = 32, bn: int = 32, bk: int = 32,
+                    interpret: Optional[bool] = None):
+    bm, bn, bk = _fit_tiles(a.shape[0], b.shape[1], a.shape[1], bm, bn, bk)
+    return _dpx.tropical_matmul(a, b, bm=bm, bn=bn, bk=bk,
+                                interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("match", "mismatch", "gap", "interpret"))
+def smith_waterman(seq_a, seq_b, *, match: int = 2, mismatch: int = -1,
+                   gap: int = -1, interpret: Optional[bool] = None):
+    return _dpx.smith_waterman(seq_a, seq_b, match=match, mismatch=mismatch,
+                               gap=gap, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "stages", "interpret"))
+def pipelined_matmul(a, b, *, bm: int = 32, bn: int = 32, bk: int = 32,
+                     stages: int = 2, interpret: Optional[bool] = None):
+    bm, bn, bk = _fit_tiles(a.shape[0], b.shape[1], a.shape[1], bm, bn, bk)
+    return _async.pipelined_matmul(a, b, bm=bm, bn=bn, bk=bk, stages=stages,
+                                   interpret=_interp(interpret))

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dpx
+from repro.models import attention as _attn
+
+
+def matmul(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    is_int = jnp.issubdtype(jnp.dtype(a.dtype), jnp.integer)
+    acc = jnp.int32 if is_int else jnp.float32
+    if out_dtype is None:
+        # integer matmuls return the int32 accumulator, like mma IMMA
+        out_dtype = acc if is_int else a.dtype
+    return jnp.dot(a, b, preferred_element_type=acc).astype(out_dtype)
+
+
+def fp8_matmul(aq: jax.Array, bq: jax.Array, sx: jax.Array, sw: jax.Array,
+               out_dtype=jnp.bfloat16) -> jax.Array:
+    acc = jnp.dot(aq.astype(jnp.bfloat16), bq.astype(jnp.bfloat16),
+                  preferred_element_type=jnp.float32)
+    return (acc * (sx * sw)).astype(out_dtype)
+
+
+def flash_attention(q, k, v, *, causal=True):
+    return _attn.attention_reference(q, k, v, causal=causal)
+
+
+def tropical_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    return dpx.tropical_matmul(a, b, semiring="max_plus")
+
+
+def smith_waterman(seq_a: jax.Array, seq_b: jax.Array, *, match: int = 2,
+                   mismatch: int = -1, gap: int = -1) -> jax.Array:
+    """Best score per pair, via the full-H oracle."""
+    def one(a, b):
+        return dpx.smith_waterman(a, b, match=match, mismatch=mismatch,
+                                  gap=gap).max()
+    return jax.vmap(one)(seq_a, seq_b)
+
+
+def pipelined_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

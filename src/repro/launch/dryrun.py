@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the *production* step — full train_step
+(loss + grad + AdamW update) for train shapes, prefill/serve steps for
+inference shapes — with the plan's in/out shardings on the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh, then:
+
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...).lower(...)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())   # proves it fits 16 GiB/chip
+    print(compiled.cost_analysis())     # per-iteration HLO FLOPs/bytes
+
+and parses the post-SPMD HLO for collective operand bytes.  Artifacts
+are dumped as JSON under --out for benchmarks/roofline_table.py and
+EXPERIMENTS.md.  NOTE (EXPERIMENTS §Roofline): cost_analysis counts
+scan bodies once; step-level roofline numbers come from
+core/analytic.py, which tests validate against unrolled HLO.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import analytic, hw, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.optim.adamw import AdamW
+from repro.sharding import axes as axes_mod
+from repro.sharding import plans as plans_mod
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, plan):
+    """Returns (step_fn, arg_specs (SDS), in_shardings, out_shardings, donate)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    params_sds = api.abstract(cfg)
+    params_ps = api.pspecs(cfg, plan.param_rules, mesh_shape)
+    in_ps = plans_mod.input_pspecs(cfg, shape, plan, mesh)
+    batch_sds = api.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        from repro.launch.train import estimate_microbatches, make_train_step
+        from repro.models.common import count_params
+        n_chips = 1
+        for s in mesh_shape.values():
+            n_chips *= s
+        state_bytes = count_params(api.param_shapes(cfg)) * 12 / n_chips
+        # >100B models: bf16 moments + bf16 grad accumulation or the
+        # optimizer state alone overflows 16 GiB chips
+        big = state_bytes > 4e9
+        opt = AdamW(moment_dtype="bfloat16" if big else "float32")
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_ps = type(opt_sds)(step=P(), m=params_ps, v=params_ps)
+        dp = 1
+        for name, size in mesh_shape.items():
+            if name != "model":
+                dp *= size
+        tokens_dev = shape.tokens / min(dp, shape.global_batch)
+        seq_shard = (mesh_shape.get("model", 1)
+                     if plan.act_rules.get("seq") == "model" else 1)
+        n_micro = estimate_microbatches(cfg, tokens_dev,
+                                        seq_shard=seq_shard)
+        n_micro = min(n_micro, max(shape.global_batch // dp, 1))
+        train_step = make_train_step(
+            cfg, opt, n_micro=n_micro,
+            acc_dtype=jnp.bfloat16 if big else jnp.float32)
+
+        args = (params_sds, opt_sds, batch_sds)
+        in_sh = (_named(mesh, params_ps), _named(mesh, opt_ps),
+                 _named(mesh, in_ps))
+        out_sh = (_named(mesh, params_ps), _named(mesh, opt_ps),
+                  None)
+        return train_step, args, in_sh, out_sh, (0, 1)
+
+    if shape.kind == "prefill":
+        cache_sds = api.cache_specs(cfg, shape)
+        cache_ps = plans_mod.cache_pspecs(cfg, shape, plan, mesh)
+        # MoE prefill at 1M tokens would build dispatch buffers over the
+        # whole prompt batch; chunk the batch dim (Sarathi-style) so the
+        # per-step dispatch stays bounded.
+        B = shape.global_batch
+        n_chunks = 1
+        if cfg.family == "moe":
+            while (shape.tokens // n_chunks > 1 << 17
+                   and B % (n_chunks * 2) == 0):
+                n_chunks *= 2
+
+        if n_chunks == 1:
+            def prefill_step(params, batch, cache):
+                return api.prefill(cfg, params, batch, cache)
+
+            args = (params_sds, batch_sds, cache_sds)
+            in_sh = (_named(mesh, params_ps), _named(mesh, in_ps),
+                     _named(mesh, cache_ps))
+            out_sh = (None, _named(mesh, cache_ps))
+            return prefill_step, args, in_sh, out_sh, (2,)
+
+        Bs = B // n_chunks
+
+        def prefill_step(params, batch):
+            chunked = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_chunks, Bs) + x.shape[1:]), batch)
+
+            def body(_, sub):
+                c = api.init_cache(cfg, Bs, shape.seq_len)
+                logits, cfull = api.prefill(cfg, params, sub, c)
+                return None, (logits, cfull)
+
+            _, (logits, caches) = jax.lax.scan(body, None, chunked)
+            cache_out = jax.tree_util.tree_map(
+                lambda x: jnp.moveaxis(x, 0, 1).reshape(
+                    (x.shape[1], n_chunks * Bs) + x.shape[3:]), caches)
+            return logits.reshape((B,) + logits.shape[2:]), cache_out
+
+        args = (params_sds, batch_sds)
+        in_sh = (_named(mesh, params_ps), _named(mesh, in_ps))
+        out_sh = (None, _named(mesh, cache_ps))
+        return prefill_step, args, in_sh, out_sh, ()
+
+    # decode
+    cache_sds = api.cache_specs(cfg, shape)
+    cache_ps = plans_mod.cache_pspecs(cfg, shape, plan, mesh)
+
+    def serve_step(params, cache, token, pos):
+        return api.decode_step(cfg, params, cache, token, pos)
+
+    args = (params_sds, cache_sds, batch_sds["token"], batch_sds["pos"])
+    tok_ps = plans_mod.batch_pspec(
+        plan, shape.global_batch, mesh_shape)
+    in_sh = (_named(mesh, params_ps), _named(mesh, cache_ps),
+             NamedSharding(mesh, tok_ps), NamedSharding(mesh, P()))
+    out_sh = (None, _named(mesh, cache_ps))
+    return serve_step, args, in_sh, out_sh, (1,)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             plan_name: Optional[str] = None,
+             remat: Optional[str] = None,
+             mesh_shape: Optional[str] = None) -> Dict[str, Any]:
+    """`mesh_shape`: e.g. "64x4" — alternative (data, model) factorization
+    of the 256-chip pod, used to compile-verify §Perf remesh iterations."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    elif shape.kind == "train":
+        cfg = dataclasses.replace(cfg, remat="full")
+    if mesh_shape:
+        dims = tuple(int(x) for x in mesh_shape.split("x"))
+        axes = ("data", "model") if len(dims) == 2 else \
+            ("pod", "data", "model")
+        mesh = jax.make_mesh(
+            dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        mesh_spec = hw.MeshSpec(shape=dims, axis_names=axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_spec = hw.MULTI_POD if multi_pod else hw.SINGLE_POD
+    plan = (plans_mod.get_plan(plan_name, multi_pod=multi_pod)
+            if plan_name else
+            plans_mod.default_plan(cfg, shape, multi_pod=multi_pod))
+
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "plan": plan.name, "status": "ok",
+    }
+    t0 = time.time()
+    try:
+        step_fn, args, in_sh, out_sh, donate = build_cell(
+            cfg, shape, mesh, plan)
+        with mesh, axes_mod.use_rules(mesh, plan.act_rules):
+            lowered = jax.jit(step_fn, in_shardings=in_sh,
+                              out_shardings=out_sh,
+                              donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+        record["compile_s"] = time.time() - t0
+        mem = roofline.memory_analysis(compiled)
+        cost = roofline.cost_analysis(compiled)
+        hlo = compiled.as_text()
+        coll = roofline.collective_bytes(hlo)
+        record["memory_analysis"] = mem
+        record["cost_analysis"] = {k: float(v) for k, v in cost.items()
+                                   if isinstance(v, (int, float))}
+        record["collective_bytes_hlo"] = coll
+        record["collective_op_counts"] = {
+            k: roofline.count_ops(hlo, k)
+            for k in ("all-reduce", "all-gather", "reduce-scatter",
+                      "all-to-all", "collective-permute")}
+        # per-device footprint vs the 16 GiB v5e budget
+        total_dev_bytes = (mem.get("argument_size_in_bytes", 0)
+                           + mem.get("output_size_in_bytes", 0)
+                           + mem.get("temp_size_in_bytes", 0)
+                           - mem.get("alias_size_in_bytes", 0))
+        record["bytes_per_device"] = int(total_dev_bytes)
+        record["fits_16g"] = bool(total_dev_bytes < 16 * 1024 ** 3)
+        # analytic step-level roofline
+        cell = analytic.analyze_cell(cfg, shape, mesh_spec, plan.name)
+        rf = cell.roofline(mesh_spec)
+        record["analytic"] = {
+            "model_flops": cell.model_flops,
+            "impl_flops_dev": cell.impl_flops_dev,
+            "hbm_bytes_dev": cell.hbm_bytes_dev,
+            "coll_bytes_dev": cell.coll_bytes_dev,
+            "compute_s": rf.compute_s,
+            "memory_s": rf.memory_s,
+            "collective_s": rf.collective_s,
+            "dominant": rf.dominant,
+            "useful_ratio": rf.useful_ratio,
+            "mfu": rf.mfu,
+            "step_s": rf.step_s,
+        }
+    except Exception as e:  # noqa: BLE001
+        record["status"] = "FAILED"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--plan", default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--mesh", default=None,
+                    help="alternative mesh, e.g. 64x4 (overrides pods)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape_name}__" + (
+                    args.mesh if args.mesh else
+                    ("pod2" if mp else "pod1"))
+                rec = run_cell(arch, shape_name, multi_pod=mp,
+                               plan_name=args.plan, remat=args.remat,
+                               mesh_shape=args.mesh)
+                path = os.path.join(args.out, tag + ".json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                ok = rec["status"] == "ok"
+                failures += 0 if ok else 1
+                if ok:
+                    print(f"{tag}: OK compile={rec['compile_s']:.1f}s "
+                          f"bytes/dev={rec['bytes_per_device']/2**30:.2f}GiB "
+                          f"fits16G={rec['fits_16g']} "
+                          f"dominant={rec['analytic']['dominant']}")
+                    print("  memory_analysis:", rec["memory_analysis"])
+                    print("  cost_analysis(flops,bytes):",
+                          rec["cost_analysis"].get("flops"),
+                          rec["cost_analysis"].get("bytes accessed"))
+                    print("  collectives(HLO):",
+                          rec["collective_bytes_hlo"])
+                else:
+                    print(f"{tag}: FAILED {rec['error']}")
+    print(f"dry-run complete, failures={failures}")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

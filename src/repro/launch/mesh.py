@@ -1,0 +1,37 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any
+jax initialization.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape: Tuple[int, ...] = None,
+                   axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    """Small CPU mesh from whatever devices exist (tests/examples)."""
+    n = jax.device_count()
+    if shape is None:
+        model = 1
+        for m in (4, 2, 1):
+            if n % m == 0:
+                model = m
+                break
+        shape = (n // model, model)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,463 @@
+"""GQA attention: flash-style blockwise training path + cached decode.
+
+The training/prefill path is a pure-jnp online-softmax (flash) attention
+so 32k-token prefill never materializes an S x S score matrix — the
+live working set is one (q_chunk x kv_chunk) block per head group.
+kernels/flash_attention.py provides the Pallas TPU version of the same
+algorithm; this module is also its oracle (kernels/ref.py imports it).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ParamSpec, apply_rope
+from repro.sharding.axes import constrain
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------
+
+def attn_specs(cfg, d_model: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d = d_model or cfg.d_model
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, KH, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, KH, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_bias:
+        specs["bq"] = ParamSpec((H, hd), ("heads", "head_dim"), init="zeros")
+        specs["bk"] = ParamSpec((KH, hd), ("kv_heads", "head_dim"), init="zeros")
+        specs["bv"] = ParamSpec((KH, hd), ("kv_heads", "head_dim"), init="zeros")
+    return specs
+
+
+def qkv_project(cfg, p, x: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: [B,S,d] -> q [B,S,H,hd], k/v [B,S,KH,hd]."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.use_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def out_project(p, o: jax.Array) -> jax.Array:
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    return constrain(y, ("batch", "seq", "embed"))
+
+
+# ----------------------------------------------------------------------
+# flash attention (pure jnp, the oracle + XLA path)
+# ----------------------------------------------------------------------
+
+def _chunk_arrays(q, k, v, qc, kc):
+    """Pad + reshape to chunked layouts; returns geometry too."""
+    B, Sq, H, hd = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    pad_q = (-Sq) % qc
+    pad_k = (-Sk) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (Sq + pad_q) // qc, (Sk + pad_k) // kc
+    qs = q.reshape(B, nq, qc, KH, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, kc, KH, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, KH, hd).transpose(1, 0, 2, 3, 4)
+    return qs, ks, vs, (B, Sq, Sk, H, KH, G, hd, nq, nk)
+
+
+def _block_mask(qp, kp, kval, causal, window):
+    mask = kval[None, :]
+    if causal:
+        mask = mask & (kp[None, :] <= qp[:, None])
+    if window:
+        mask = mask & (kp[None, :] > qp[:, None] - window)
+    return mask                                   # [qc, kc]
+
+
+def _causal_pairs(nq, nk, qc, kc, q_offset):
+    """Static lower-triangle (i, j) block-pair list: block j is needed by
+    block i iff its first key position can be attended by i's last query.
+    Ordered i-major so the online-softmax state streams per q-block."""
+    pairs = []
+    for i in range(nq):
+        q_max = q_offset + (i + 1) * qc - 1
+        for j in range(nk):
+            if j * kc <= q_max:
+                pairs.append((i, j))
+    return pairs
+
+
+def _attn_fwd_pairs(qs, ks, vs, geom, scale, q_pos, k_pos, k_valid,
+                    causal, window, q_offset, qc, kc):
+    """Causal-skip forward: scan over the lower-triangle block pairs
+    only (~half the FLOPs of the full grid at Sq == Sk)."""
+    B, Sq, Sk, H, KH, G, hd, nq, nk = geom
+    pairs = _causal_pairs(nq, nk, qc, kc, q_offset)
+    pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    pj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    # `new_i` marks the first pair of each q-block (state reset)
+    new_i = jnp.asarray([1] + [int(pairs[t][0] != pairs[t - 1][0])
+                               for t in range(1, len(pairs))], jnp.int32)
+    # `last_j` marks the final pair of each q-block (state flush)
+    last_j = jnp.asarray([int(t + 1 == len(pairs)
+                              or pairs[t + 1][0] != pairs[t][0])
+                          for t in range(len(pairs))], jnp.int32)
+
+    def step(carry, inp):
+        m, l, acc, out_buf, lse_buf = carry
+        i, j, fresh, flush = inp
+        reset = fresh.astype(jnp.float32)
+        m = jnp.where(fresh > 0, jnp.full_like(m, NEG_INF), m)
+        l = l * (1.0 - reset)
+        acc = acc * (1.0 - reset)
+        qb = qs[i]
+        kb, vb = ks[j], vs[j]
+        qp, kp, kval = q_pos[i], k_pos[j], k_valid[j]
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(qp, kp, kval, causal, window)
+        s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+
+        def do_flush(bufs):
+            out_buf, lse_buf = bufs
+            lse = m_new + jnp.log(jnp.maximum(l, 1e-30))
+            norm = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+            out_i = (acc / norm)[None]
+            return (lax.dynamic_update_slice(
+                        out_buf, out_i, (i, 0, 0, 0, 0, 0)),
+                    lax.dynamic_update_slice(
+                        lse_buf, lse[None], (i, 0, 0, 0, 0)))
+
+        out_buf, lse_buf = lax.cond(flush > 0, do_flush,
+                                    lambda b: b, (out_buf, lse_buf))
+        return (m_new, l, acc, out_buf, lse_buf), None
+
+    m0 = jnp.full((B, KH, G, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, qc), jnp.float32)
+    a0 = jnp.zeros((B, qc, KH, G, hd), jnp.float32)
+    out0 = jnp.zeros((nq, B, qc, KH, G, hd), jnp.float32)
+    lse0 = jnp.full((nq, B, KH, G, qc), NEG_INF, jnp.float32)
+    (_, _, _, out, lse), _ = lax.scan(
+        step, (m0, l0, a0, out0, lse0), (pi, pj, new_i, last_j))
+    return out, lse
+
+
+def _attn_fwd(q, k, v, causal, window, qc, kc, q_offset):
+    """Blockwise online-softmax forward. Also returns the LSE rows
+    (needed by the hand-written backward)."""
+    qs, ks, vs, (B, Sq, Sk, H, KH, G, hd, nq, nk) = \
+        _chunk_arrays(q, k, v, qc, kc)
+    scale = hd ** -0.5
+    q_pos = q_offset + jnp.arange(nq * qc).reshape(nq, qc)
+    k_pos = jnp.arange(nk * kc).reshape(nk, kc)
+    k_valid = (jnp.arange(nk * kc) < Sk).reshape(nk, kc)
+
+    if causal and not window and nq > 1:
+        # causal block skipping: only lower-triangle pairs executed
+        out, lse = _attn_fwd_pairs(
+            qs, ks, vs, (B, Sq, Sk, H, KH, G, hd, nq, nk), scale,
+            q_pos, k_pos, k_valid, causal, window, q_offset, qc, kc)
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qc, H, hd)
+        return out[:, :Sq].astype(q.dtype), lse
+
+    def q_block(args):
+        qb, qp = args                       # [B,qc,KH,G,hd], [qc]
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, kp, kval = inp
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(qp, kp, kval, causal, window)
+            s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, qc, KH, G, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  (ks, vs, k_pos, k_valid))
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))      # [B,KH,G,qc]
+        l = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return acc / l, lse
+
+    out, lse = lax.map(q_block, (qs, q_pos))  # [nq,B,qc,KH,G,hd], [nq,B,KH,G,qc]
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qc, H, hd)
+    return out[:, :Sq].astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, qc, kc, q_offset):
+    return _attn_fwd(q, k, v, causal, window, qc, kc, q_offset)[0]
+
+
+def _flash_fwd_rule(q, k, v, causal, window, qc, kc, q_offset):
+    out, lse = _attn_fwd(q, k, v, causal, window, qc, kc, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_pairs_scan(qs, gs, lses, Ds, ks, vs, geom, scale, q_pos, k_pos,
+                    k_valid, causal, window, q_offset, qc, kc):
+    """Causal-skip backward: j-major lower-triangle pair scan."""
+    B, Sq, Sk, H, KH, G, hd, nq, nk = geom
+    pairs = [(i, j) for j in range(nk) for i in range(nq)
+             if j * kc <= q_offset + (i + 1) * qc - 1]
+    pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    pj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    new_j = jnp.asarray([1] + [int(pairs[t][1] != pairs[t - 1][1])
+                               for t in range(1, len(pairs))], jnp.int32)
+    last_i = jnp.asarray([int(t + 1 == len(pairs)
+                              or pairs[t + 1][1] != pairs[t][1])
+                          for t in range(len(pairs))], jnp.int32)
+
+    def step(carry, inp):
+        dk_j, dv_j, dq_buf, dk_buf, dv_buf = carry
+        i, j, fresh, flush = inp
+        keep = 1.0 - fresh.astype(jnp.float32)
+        dk_j = dk_j * keep
+        dv_j = dv_j * keep
+        qb, gb, lseb, Db = qs[i], gs[i], lses[i], Ds[i]
+        kb, vb = ks[j], vs[j]
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(q_pos[i], k_pos[j], k_valid[j], causal, window)
+        p = jnp.where(mask[None, None, None, :, :],
+                      jnp.exp(s - lseb[..., None]), 0.0)
+        dv_j = dv_j + jnp.einsum("bkgqt,bqkgd->btkd", p, gb)
+        dp = jnp.einsum("bqkgd,btkd->bkgqt", gb, vb.astype(jnp.float32))
+        ds = p * (dp - Db[..., None]) * scale
+        dk_j = dk_j + jnp.einsum("bkgqt,bqkgd->btkd", ds,
+                                 qb.astype(jnp.float32))
+        dq_i = jnp.einsum("bkgqt,btkd->bqkgd", ds, kb.astype(jnp.float32))
+        old = lax.dynamic_slice(
+            dq_buf, (i, 0, 0, 0, 0, 0), (1,) + dq_buf.shape[1:])
+        dq_buf = lax.dynamic_update_slice(dq_buf, old + dq_i[None],
+                                          (i, 0, 0, 0, 0, 0))
+
+        def do_flush(bufs):
+            dk_buf, dv_buf = bufs
+            return (lax.dynamic_update_slice(dk_buf, dk_j[None],
+                                             (j, 0, 0, 0, 0)),
+                    lax.dynamic_update_slice(dv_buf, dv_j[None],
+                                             (j, 0, 0, 0, 0)))
+
+        dk_buf, dv_buf = lax.cond(flush > 0, do_flush, lambda b: b,
+                                  (dk_buf, dv_buf))
+        return (dk_j, dv_j, dq_buf, dk_buf, dv_buf), None
+
+    zeros_kv = jnp.zeros((B, kc, KH, hd), jnp.float32)
+    dq0 = jnp.zeros((nq, B, qc, KH, G, hd), jnp.float32)
+    dkv0 = jnp.zeros((nk, B, kc, KH, hd), jnp.float32)
+    (_, _, dq, dks, dvs), _ = lax.scan(
+        step, (zeros_kv, zeros_kv, dq0, dkv0, dkv0),
+        (pi, pj, new_j, last_i))
+    return dq, dks, dvs
+
+
+def _flash_bwd_rule(causal, window, qc, kc, q_offset, res, g):
+    """Hand-written blockwise backward (FlashAttention bwd): recomputes
+    each (q-block, kv-block) probability tile from (q, k, lse) and
+    accumulates dq/dk/dv — O(S*d) live memory, never O(S^2).  Causal
+    cells iterate only the lower-triangle block pairs."""
+    q, k, v, out, lse = res
+    lses = lse                               # [nq, B, KH, G, qc]
+    in_dtype = q.dtype
+    qs, ks, vs, (B, Sq, Sk, H, KH, G, hd, nq, nk) = \
+        _chunk_arrays(q, k, v, qc, kc)
+    gs = _chunk_arrays(g.astype(jnp.float32), k, v, qc, kc)[0]
+    scale = hd ** -0.5
+    # D = rowsum(dout * out), per query row
+    D = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    D = jnp.pad(D, ((0, 0), (0, nq * qc - Sq), (0, 0)))
+    Ds = D.reshape(B, nq, qc, KH, G).transpose(1, 0, 3, 4, 2)  # [nq,B,KH,G,qc]
+    q_pos = q_offset + jnp.arange(nq * qc).reshape(nq, qc)
+    k_pos = jnp.arange(nk * kc).reshape(nk, kc)
+    k_valid = (jnp.arange(nk * kc) < Sk).reshape(nk, kc)
+
+    if causal and not window and nq > 1:
+        dq, dks, dvs = _bwd_pairs_scan(
+            qs, gs, lses, Ds, ks, vs,
+            (B, Sq, Sk, H, KH, G, hd, nq, nk), hd ** -0.5,
+            q_pos, k_pos, k_valid, causal, window, q_offset, qc, kc)
+        dq = dq.transpose(1, 0, 2, 3, 4, 5).reshape(
+            B, nq * qc, H, hd)[:, :Sq]
+        dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, nk * kc, KH,
+                                                  hd)[:, :Sk]
+        dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, nk * kc, KH,
+                                                  hd)[:, :Sk]
+        return (dq.astype(in_dtype), dk.astype(in_dtype),
+                dv.astype(in_dtype))
+
+    def kv_block(dq_acc, inp):
+        kb, vb, kp, kval = inp
+
+        def q_step(carry, qinp):
+            dk_j, dv_j = carry
+            qb, gb, lseb, Db, qp = qinp
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(qp, kp, kval, causal, window)
+            p = jnp.where(mask[None, None, None, :, :],
+                          jnp.exp(s - lseb[..., None]), 0.0)
+            dv_j = dv_j + jnp.einsum("bkgqt,bqkgd->btkd", p, gb)
+            dp = jnp.einsum("bqkgd,btkd->bkgqt", gb,
+                            vb.astype(jnp.float32))
+            ds = p * (dp - Db[..., None]) * scale
+            dk_j = dk_j + jnp.einsum("bkgqt,bqkgd->btkd", ds,
+                                     qb.astype(jnp.float32))
+            dq_i = jnp.einsum("bkgqt,btkd->bqkgd", ds,
+                              kb.astype(jnp.float32))
+            return (dk_j, dv_j), dq_i
+
+        zeros_kv = jnp.zeros((B, kc, KH, hd), jnp.float32)
+        (dk_j, dv_j), dq_contrib = lax.scan(
+            q_step, (zeros_kv, zeros_kv), (qs, gs, lses, Ds, q_pos))
+        return dq_acc + dq_contrib, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((nq, B, qc, KH, G, hd), jnp.float32)
+    dq, (dks, dvs) = lax.scan(kv_block, dq0,
+                              (ks, vs, k_pos, k_valid))
+    dq = dq.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qc, H, hd)[:, :Sq]
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, nk * kc, KH, hd)[:, :Sk]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, nk * kc, KH, hd)[:, :Sk]
+    return (dq.astype(in_dtype), dk.astype(in_dtype), dv.astype(in_dtype))
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_chunk: int = 512, kv_chunk: int = 512,
+                    q_offset: int = 0) -> jax.Array:
+    """Blockwise online-softmax attention with GQA + flash backward.
+
+    q: [B,Sq,H,hd]; k,v: [B,Sk,KH,hd]; H % KH == 0.  `q_offset` is the
+    absolute position of q[0] (prefill: 0; decode chunk: cache length).
+    Returns [B,Sq,H,hd] in q.dtype; softmax in fp32.
+    """
+    qc = min(q_chunk, q.shape[1])
+    kc = min(kv_chunk, k.shape[1])
+    return _flash(q, k, v, causal, window, qc, kc, q_offset)
+
+
+def attention_reference(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Naive O(S^2)-memory oracle for tests (small shapes only)."""
+    B, Sq, H, hd = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, hd)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    qp = q_offset + jnp.arange(Sq)
+    kp = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window:
+        mask &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# decode with KV cache
+# ----------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, *, layers: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    KH, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (layers, batch, max_len, KH, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "length": jnp.zeros((), jnp.int32)}
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array) -> jax.Array:
+    """One-step decode: q [B,1,H,hd] vs cache [B,T,KH,hd].
+
+    Memory is linear in T, so no chunking is needed even at T=512k; with
+    the cache sequence-sharded ("kv_seq" -> a mesh axis) XLA emits the
+    split-K/flash-decode pattern (partial max/sum + small all-reduces).
+    """
+    B, _, H, hd = q.shape
+    T, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    kv_len = jnp.asarray(kv_len)
+    bound = kv_len[:, None, None, None] if kv_len.ndim == 1 else kv_len
+    valid = jnp.arange(T)[None, None, None, :] < bound
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def update_cache(cache_k: jax.Array, cache_v: jax.Array, k1: jax.Array,
+                 v1: jax.Array, pos: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Write one decode step's k/v ([B,1,KH,hd]) at `pos` into [B,T,KH,hd].
+
+    `pos` may be a scalar (lockstep decode) or a per-slot [B] vector
+    (continuous batching, runtime/server.py).
+    """
+    pos = jnp.asarray(pos)
+    if pos.ndim == 1:
+        def upd(ck, cv, k_, v_, p):
+            ck = lax.dynamic_update_slice(ck, k_.astype(ck.dtype), (p, 0, 0))
+            cv = lax.dynamic_update_slice(cv, v_.astype(cv.dtype), (p, 0, 0))
+            return ck, cv
+        return jax.vmap(upd)(cache_k, cache_v, k1, v1, pos)
+    cache_k = lax.dynamic_update_slice(
+        cache_k, k1.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = lax.dynamic_update_slice(
+        cache_v, v1.astype(cache_v.dtype), (0, pos, 0, 0))
+    return cache_k, cache_v
+
+
+def attention_flops(B: int, Sq: int, Sk: int, H: int, hd: int,
+                    causal: bool) -> float:
+    """Useful FLOPs of the score+value matmuls (for MODEL_FLOPS)."""
+    pairs = Sq * Sk if not causal else Sq * Sk - Sq * (Sq - 1) / 2 \
+        if Sq == Sk else Sq * Sk
+    return 2 * 2 * B * H * pairs * hd

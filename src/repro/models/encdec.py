@@ -1,0 +1,201 @@
+"""Encoder-decoder transformer (whisper-small backbone).
+
+The conv/audio frontend is a stub per the assignment: `input_specs()`
+feeds precomputed frame embeddings [B, S_enc, d].  Encoder layers are
+bidirectional; decoder layers are causal self-attn + cross-attn to the
+encoder output.  Whisper uses LayerNorm + GELU + biases and learned
+absolute positions — all of which the config encodes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import (ParamSpec, apply_norm, cross_entropy,
+                                 norm_spec)
+from repro.models.transformer import _remat, stack_specs
+from repro.sharding.axes import constrain
+
+Params = Dict[str, Any]
+
+
+def enc_layer_specs(cfg) -> Params:
+    return {
+        "ln1": norm_spec(cfg, cfg.d_model),
+        "attn": attn.attn_specs(cfg),
+        "ln2": norm_spec(cfg, cfg.d_model),
+        "mlp": mlp_mod.mlp_specs(cfg),
+    }
+
+
+def dec_layer_specs(cfg) -> Params:
+    return {
+        "ln1": norm_spec(cfg, cfg.d_model),
+        "self_attn": attn.attn_specs(cfg),
+        "ln2": norm_spec(cfg, cfg.d_model),
+        "cross_attn": attn.attn_specs(cfg),
+        "ln3": norm_spec(cfg, cfg.d_model),
+        "mlp": mlp_mod.mlp_specs(cfg),
+    }
+
+
+def encdec_specs(cfg) -> Params:
+    return {
+        "embed": ParamSpec((cfg.padded_vocab_size, cfg.d_model),
+                           ("vocab", "embed"), scale=0.02),
+        "enc_pos": ParamSpec((cfg.max_source_len, cfg.d_model),
+                             (None, "embed"), scale=0.02),
+        "dec_pos": ParamSpec((cfg.max_target_len, cfg.d_model),
+                             (None, "embed"), scale=0.02),
+        "enc_layers": stack_specs(enc_layer_specs(cfg), cfg.enc_layers),
+        "dec_layers": stack_specs(dec_layer_specs(cfg), cfg.dec_layers),
+        "enc_norm": norm_spec(cfg, cfg.d_model),
+        "final_norm": norm_spec(cfg, cfg.d_model),
+        # whisper ties the unembedding to the token embedding
+    }
+
+
+def _self_block(cfg, p, x, *, causal):
+    q, k, v = attn.qkv_project(cfg, p, x)
+    o = attn.flash_attention(q, k, v, causal=causal)
+    return attn.out_project(p, o)
+
+
+def _cross_block(cfg, p, x, enc_out):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    if cfg.use_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    o = attn.flash_attention(q, k, v, causal=False)
+    return attn.out_project(p, o)
+
+
+def encode(cfg, params, frames: jax.Array) -> jax.Array:
+    """frames: [B, S_enc, d] (stub frontend output) -> encoder hidden."""
+    S = frames.shape[1]
+    pos = params["enc_pos"][:S].astype(frames.dtype)
+    x = constrain(frames + pos[None], ("batch", "seq", "embed"))
+
+    def body(x, lp):
+        def blk(lp, x):
+            x = x + _self_block(cfg, lp["attn"],
+                                apply_norm(cfg, x, lp["ln1"]), causal=False)
+            return x + mlp_mod.mlp(cfg, lp["mlp"],
+                                   apply_norm(cfg, x, lp["ln2"]))
+        return _remat(cfg, blk)(lp, x), None
+
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg, x, params["enc_norm"])
+
+
+def decode(cfg, params, tokens: jax.Array, enc_out: jax.Array) -> jax.Array:
+    B, S = tokens.shape
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    x = x + params["dec_pos"][:S].astype(x.dtype)[None]
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def body(x, lp):
+        def blk(lp, x):
+            x = x + _self_block(cfg, lp["self_attn"],
+                                apply_norm(cfg, x, lp["ln1"]), causal=True)
+            x = x + _cross_block(cfg, lp["cross_attn"],
+                                 apply_norm(cfg, x, lp["ln2"]), enc_out)
+            return x + mlp_mod.mlp(cfg, lp["mlp"],
+                                   apply_norm(cfg, x, lp["ln3"]))
+        return _remat(cfg, blk)(lp, x), None
+
+    x, _ = lax.scan(body, x, params["dec_layers"])
+    return apply_norm(cfg, x, params["final_norm"])
+
+
+def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    enc_out = encode(cfg, params, batch["frames"])
+    h = decode(cfg, params, batch["tokens"], enc_out)
+    logits = h @ params["embed"].T.astype(h.dtype)
+    return cross_entropy(logits, batch["labels"])
+
+
+# --- serving -------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    L = cfg.dec_layers
+    KH, hd = cfg.num_kv_heads, cfg.head_dim
+    max_len = min(max_len, cfg.max_target_len)
+    return {
+        "k": jnp.zeros((L, batch, max_len, KH, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, KH, hd), dtype),
+        # cross-attn K/V are computed once from enc_out at prefill
+        "xk": jnp.zeros((L, batch, cfg.max_source_len, KH, hd), dtype),
+        "xv": jnp.zeros((L, batch, cfg.max_source_len, KH, hd), dtype),
+    }
+
+
+def prefill(cfg, params, frames: jax.Array, cache: Params
+            ) -> Tuple[jax.Array, Params]:
+    """Encode source + precompute per-layer cross K/V."""
+    enc_out = encode(cfg, params, frames)
+
+    def xkv(lp):
+        dt = enc_out.dtype
+        k = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       lp["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       lp["cross_attn"]["wv"].astype(dt))
+        if cfg.use_bias:
+            k = k + lp["cross_attn"]["bk"].astype(dt)
+            v = v + lp["cross_attn"]["bv"].astype(dt)
+        return k, v
+
+    xk, xv = jax.vmap(xkv)(params["dec_layers"])
+    cache = dict(cache)
+    cache["xk"], cache["xv"] = xk.astype(cache["xk"].dtype), \
+        xv.astype(cache["xv"].dtype)
+    return enc_out, cache
+
+
+def decode_step(cfg, params, cache: Params, token: jax.Array,
+                pos: jax.Array) -> Tuple[jax.Array, Params]:
+    B = token.shape[0]
+    pos = jnp.minimum(pos, cfg.max_target_len - 1)
+    x = params["embed"].astype(jnp.bfloat16)[token][:, None, :]
+    x = x + params["dec_pos"][pos][None, None].astype(x.dtype)
+    x = constrain(x, ("batch", None, "embed"))
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        h = apply_norm(cfg, x, lp["ln1"])
+        q, k1, v1 = attn.qkv_project(cfg, lp["self_attn"], h)
+        ck, cv = attn.update_cache(ck, cv, k1, v1, pos)
+        o = attn.decode_attention(q, ck, cv, pos + 1)
+        x = x + attn.out_project(lp["self_attn"], o)
+        # cross-attention against the precomputed encoder K/V
+        h = apply_norm(cfg, x, lp["ln2"])
+        dt = h.dtype
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"].astype(dt))
+        if cfg.use_bias:
+            q = q + lp["cross_attn"]["bq"].astype(dt)
+        o = attn.decode_attention(q, xk, xv, xk.shape[1])
+        x = x + attn.out_project(lp["cross_attn"], o)
+        h = apply_norm(cfg, x, lp["ln3"])
+        x = x + mlp_mod.mlp(cfg, lp["mlp"], h)
+        return x, (ck, cv)
+
+    x, (nk, nv) = lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = (x @ params["embed"].T.astype(x.dtype))[:, 0,
+                                                     : cfg.vocab_size]
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = nk, nv
+    return logits, new_cache

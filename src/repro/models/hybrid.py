@@ -1,0 +1,158 @@
+"""Hybrid SSM+attention LM (zamba2-2.7b: Mamba-2 stack with a *shared*
+attention block applied every `attn_every` layers).
+
+The layer stack is organised as `num_layers / attn_every` super-blocks:
+each super-block scans `attn_every` Mamba-2 layers (stacked params,
+inner scan) and then applies the single shared attention+MLP block —
+zamba2's parameter-sharing trick, which also keeps the KV cache to
+`num_superblocks` entries instead of `num_layers`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import ssm
+from repro.models.common import (ParamSpec, apply_norm, apply_rope,
+                                 chunked_softmax_xent, cross_entropy,
+                                 norm_spec)
+from repro.models.transformer import (_remat, stack_specs, unembed_matrix,
+                                      logits_fn, embed_tokens)
+from repro.sharding.axes import constrain
+
+Params = Dict[str, Any]
+
+
+def n_superblocks(cfg) -> int:
+    assert cfg.num_layers % cfg.attn_every == 0
+    return cfg.num_layers // cfg.attn_every
+
+
+def hybrid_specs(cfg) -> Params:
+    mamba_layer = {"ln": norm_spec(cfg, cfg.d_model),
+                   "mixer": ssm.mamba2_specs(cfg)}
+    inner = stack_specs(mamba_layer, cfg.attn_every, "inner_layers")
+    stacked = stack_specs(inner, n_superblocks(cfg))
+    shared = {
+        "ln1": norm_spec(cfg, cfg.d_model),
+        "attn": attn.attn_specs(cfg),
+        "ln2": norm_spec(cfg, cfg.d_model),
+        "mlp": mlp_mod.mlp_specs(cfg),
+    }
+    specs: Params = {
+        "embed": ParamSpec((cfg.padded_vocab_size, cfg.d_model),
+                           ("vocab", "embed"), scale=0.02),
+        "mamba": stacked,
+        "shared": shared,
+        "final_norm": norm_spec(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, cfg.padded_vocab_size),
+                                     ("embed", "vocab"))
+    return specs
+
+
+def _shared_block(cfg, sp, x: jax.Array, positions: jax.Array) -> jax.Array:
+    h = apply_norm(cfg, x, sp["ln1"])
+    q, k, v = attn.qkv_project(cfg, sp["attn"], h)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attn.flash_attention(q, k, v, causal=True)
+    x = x + attn.out_project(sp["attn"], o)
+    h = apply_norm(cfg, x, sp["ln2"])
+    return x + mlp_mod.mlp(cfg, sp["mlp"], h)
+
+
+def forward(cfg, params, tokens: jax.Array, *,
+            prefix_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens, prefix_embeds)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def super_body(x, sb_params):
+        def inner_body(x, lp):
+            def blk(lp, x):
+                h = apply_norm(cfg, x, lp["ln"])
+                y, _ = ssm.mamba2_mixer(cfg, lp["mixer"], h)
+                return x + y
+            return _remat(cfg, blk)(lp, x), None
+
+        x, _ = lax.scan(inner_body, x, sb_params)
+        x = _remat(cfg, lambda sp, x: _shared_block(cfg, sp, x, positions))(
+            params["shared"], x)
+        return x, None
+
+    x, _ = lax.scan(super_body, x, params["mamba"])
+    x = apply_norm(cfg, x, params["final_norm"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    h, _ = forward(cfg, params, batch["tokens"])
+    B, S, d = h.shape
+    w = unembed_matrix(cfg, params).astype(h.dtype)
+    if cfg.vocab_size * S * B > 2 ** 28:
+        return chunked_softmax_xent(h.reshape(B * S, d), w,
+                                    batch["labels"].reshape(B * S))
+    return cross_entropy(h @ w, batch["labels"])
+
+
+# --- serving -------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    NS = n_superblocks(cfg)
+    st = ssm.mamba2_state(cfg, batch, dtype)
+    mamba_state = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(
+            x[None, None], (NS, cfg.attn_every) + x.shape), st)
+    KH, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "mamba": mamba_state,
+        "k": jnp.zeros((NS, batch, max_len, KH, hd), dtype),
+        "v": jnp.zeros((NS, batch, max_len, KH, hd), dtype),
+    }
+
+
+def decode_step(cfg, params, cache: Params, token: jax.Array,
+                pos: jax.Array) -> Tuple[jax.Array, Params]:
+    B = token.shape[0]
+    x = params["embed"].astype(jnp.bfloat16)[token][:, None, :]
+    x = constrain(x, ("batch", None, "embed"))
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def super_body(x, inp):
+        sb_params, sb_state, ck, cv = inp
+
+        def inner_body(x, lp_st):
+            lp, st = lp_st
+            h = apply_norm(cfg, x, lp["ln"])
+            y, new_st = ssm.mamba2_mixer(cfg, lp["mixer"], h, state=st)
+            return x + y, new_st
+
+        x, new_state = lax.scan(inner_body, x, (sb_params, sb_state))
+        # shared attention with this super-block's KV cache slice
+        sp = params["shared"]
+        h = apply_norm(cfg, x, sp["ln1"])
+        q, k1, v1 = attn.qkv_project(cfg, sp["attn"], h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k1 = apply_rope(k1, positions, cfg.rope_theta)
+        ck, cv = attn.update_cache(ck, cv, k1, v1, pos)
+        o = attn.decode_attention(q, ck, cv, pos + 1)
+        x = x + attn.out_project(sp["attn"], o)
+        h = apply_norm(cfg, x, sp["ln2"])
+        x = x + mlp_mod.mlp(cfg, sp["mlp"], h)
+        return x, (new_state, ck, cv)
+
+    x, (new_mamba, new_k, new_v) = lax.scan(
+        super_body, x,
+        (params["mamba"], cache["mamba"], cache["k"], cache["v"]))
+    x = apply_norm(cfg, x, params["final_norm"])
+    return logits_fn(cfg, params, x)[:, 0], {
+        "mamba": new_mamba, "k": new_k, "v": new_v}

@@ -1,0 +1,48 @@
+"""Dense MLP (SwiGLU / GELU), optionally routed through the TE fp8 path."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, activation
+from repro.sharding.axes import constrain
+
+
+def mlp_specs(cfg, d_model: Optional[int] = None,
+              d_ff: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    specs = {
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+    if cfg.activation == "swiglu":
+        specs["w_gate"] = ParamSpec((d, f), ("embed", "mlp"))
+    if cfg.use_bias:
+        specs["b_up"] = ParamSpec((f,), ("mlp",), init="zeros")
+        specs["b_down"] = ParamSpec((d,), ("embed",), init="zeros")
+    return specs
+
+
+def mlp(cfg, p, x: jax.Array) -> jax.Array:
+    """x: [..., d] -> [..., d]."""
+    dt = x.dtype
+    up = x @ p["w_up"].astype(dt)
+    if cfg.use_bias:
+        up = up + p["b_up"].astype(dt)
+    gate = x @ p["w_gate"].astype(dt) if "w_gate" in p else None
+    h = activation(cfg, up, gate)
+    h = constrain(h, ("batch", None, "mlp"))
+    y = h @ p["w_down"].astype(dt)
+    if cfg.use_bias:
+        y = y + p["b_down"].astype(dt)
+    return constrain(y, ("batch", "seq", "embed"))
+
+
+def mlp_flops(d: int, f: int, gated: bool) -> float:
+    """Matmul FLOPs per token, fwd only."""
+    n_mats = 3 if gated else 2
+    return 2.0 * n_mats * d * f

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts MLP with sort-based capacity dispatch (EP-ready).
+
+Dispatch is index-based (argsort by expert), not one-hot-einsum based:
+a [tokens, E, capacity] one-hot dispatch tensor at dbrx/moonshot scale
+would be ~1e13 elements, while the sorted-gather form keeps dispatch at
+O(tokens) integers and the expert compute at its true FLOP cost
+2 * E * C * d * ff * n_mats.  Experts are sharded over the "experts"
+logical axis (EP -> "model" mesh axis); XLA inserts the all-to-all-like
+exchange at the gather/scatter boundaries.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, activation
+from repro.sharding.axes import constrain
+
+
+def moe_specs(cfg) -> Dict[str, ParamSpec]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    specs = {
+        "router": ParamSpec((d, E), ("embed", "experts"), scale=d ** -0.5),
+        "w_up": ParamSpec((E, d, f), ("experts", "embed", "mlp")),
+        "w_down": ParamSpec((E, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.activation == "swiglu":
+        specs["w_gate"] = ParamSpec((E, d, f), ("experts", "embed", "mlp"))
+    return specs
+
+
+def route(cfg, p, x_flat: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x_flat: [T, d] -> (gates [T,k], expert_idx [T,k], aux_loss)."""
+    logits = (x_flat @ p["router"].astype(x_flat.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing auxiliary loss.
+    E = cfg.num_experts
+    me = jnp.mean(probs, axis=0)                               # mean prob
+    ce = jnp.mean(
+        jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)  # top1 frac
+    aux = E * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def moe_mlp(cfg, p, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,d] -> ([B,S,d], aux_loss). Sort-based capacity dispatch."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.top_k
+    C = int(cfg.capacity_factor * T * K / E)
+    C = max(8, (C + 7) // 8 * 8)
+
+    xf = x.reshape(T, d)
+    gates, idx, aux = route(cfg, p, xf)
+
+    # Flatten (token, k) assignment pairs and sort by expert id.
+    flat_expert = idx.reshape(-1)                      # [T*K]
+    flat_token = jnp.repeat(jnp.arange(T), K)          # [T*K]
+    flat_gate = gates.reshape(-1)
+    order = jnp.argsort(flat_expert)                   # stable
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    # Position of each assignment within its expert's contiguous run.
+    ones = jnp.ones_like(sorted_expert)
+    pos_in_expert = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(sorted_expert, jnp.arange(E), side="left")
+    pos_in_expert = pos_in_expert - seg_start[sorted_expert]
+    keep = pos_in_expert < C                           # overflow drops
+    pos_safe = jnp.where(keep, pos_in_expert, C)       # C is out of bounds
+
+    # Gather tokens and scatter straight into the *sharded* [E, C, d]
+    # buffer (2D indices, mode="drop" implements capacity overflow).
+    # Both data-dependent copies are explicitly constrained; see
+    # EXPERIMENTS.md §Perf for the explicit all-to-all EP variant.
+    gathered = constrain(xf[sorted_token], ("tokens", "embed"))
+    zeros = constrain(jnp.zeros((E, C, d), xf.dtype),
+                      ("experts", None, "embed"))
+    buf = zeros.at[sorted_expert, pos_safe].set(gathered, mode="drop")
+    buf = constrain(buf, ("experts", None, "embed"))
+
+    # Expert compute: grouped matmuls at true FLOP cost.  The capacity
+    # dim is chunked through a checkpointed map so expert-hidden
+    # activations stay O(chunk x d_ff) regardless of token count.
+    dt = x.dtype
+
+    def expert_mlp(bc):
+        up = jnp.einsum("ecd,edf->ecf", bc, p["w_up"].astype(dt))
+        gate_h = (jnp.einsum("ecd,edf->ecf", bc, p["w_gate"].astype(dt))
+                  if "w_gate" in p else None)
+        h = activation(cfg, up, gate_h)
+        h = constrain(h, ("experts", None, "mlp"))
+        o = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+        return constrain(o, ("experts", None, "embed"))
+
+    CHUNK = 4096
+    if C > CHUNK:
+        n_chunks = -(-C // CHUNK)
+        pad_c = n_chunks * CHUNK - C
+        buf_p = jnp.pad(buf, ((0, 0), (0, pad_c), (0, 0)))
+        bufs = buf_p.reshape(E, n_chunks, CHUNK, d).transpose(1, 0, 2, 3)
+        outs = jax.lax.map(jax.checkpoint(expert_mlp), bufs)
+        out = outs.transpose(1, 0, 2, 3).reshape(E, n_chunks * CHUNK, d)
+        out = out[:, :C]
+    else:
+        out = expert_mlp(buf)
+
+    # Combine: gather (OOB -> 0) + scatter-add weighted outputs to tokens.
+    contrib = out.at[sorted_expert, pos_safe].get(mode="fill",
+                                                  fill_value=0)
+    contrib = contrib * (sorted_gate * keep).astype(dt)[:, None]
+    contrib = constrain(contrib, ("tokens", "embed"))
+    y = jnp.zeros((T, d), dt).at[sorted_token].add(contrib)
+    y = constrain(y, ("tokens", "embed"))
+    return y.reshape(B, S, d), aux
+
+
+def moe_flops_per_token(cfg) -> float:
+    n_mats = 3 if cfg.activation == "swiglu" else 2
+    return 2.0 * n_mats * cfg.top_k * cfg.d_model * cfg.d_ff

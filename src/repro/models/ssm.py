@@ -1,0 +1,274 @@
+"""State-space mixers: Mamba-1 selective scan and Mamba-2 SSD.
+
+Both are written chunk-wise: an outer `lax.scan` over sequence chunks
+carries the recurrent state, and only one chunk's [C, d, N] (Mamba-1) or
+[C, C] (SSD) intermediates are ever live — the TPU-friendly shape of the
+"hardware-aware" scan, with channels ("ssm_inner"/heads) sharded over
+the model axis (the recurrence is diagonal, so channel sharding needs no
+collectives inside the scan).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ParamSpec
+from repro.sharding.axes import constrain
+
+
+# ----------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# ----------------------------------------------------------------------
+
+def mamba1_specs(cfg) -> Dict[str, ParamSpec]:
+    d, di, N, R, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.dt_rank, cfg.conv_width)
+    return {
+        "w_in": ParamSpec((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((W, di), (None, "ssm_inner"),
+                            scale=W ** -0.5),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), init="zeros"),
+        "w_x": ParamSpec((di, R + 2 * N), ("ssm_inner", None)),
+        "w_dt": ParamSpec((R, di), (None, "ssm_inner")),
+        "dt_bias": ParamSpec((di,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((di, N), ("ssm_inner", None), init="ones"),
+        "d_skip": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "w_out": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: [B,L,C]; w: [W,C]. Returns (y, new_state).
+
+    `state` is the trailing W-1 inputs from the previous segment
+    ([B,W-1,C]); zeros for the start of a sequence.
+    """
+    B, L, C = x.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # [B, L+W-1, C]
+    y = jnp.zeros((B, L, C), jnp.float32)
+    for i in range(W):                                 # W is tiny (4)
+        y = y + xp[:, i:i + L].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype), xp[:, L:]
+
+
+def _scan_chunk(dA: jax.Array, dBx: jax.Array, h0: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Within-chunk associative scan of h_t = dA_t h_{t-1} + dBx_t.
+
+    dA, dBx: [B, C, d, N]; h0: [B, d, N].  Returns (h over chunk, h_last).
+    """
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a, b = lax.associative_scan(op, (dA, dBx), axis=1)
+    h = a * h0[:, None] + b
+    return h, h[:, -1]
+
+
+def mamba1_mixer(cfg, p, x: jax.Array, *, chunk: int = 128,
+                 state: Optional[Dict[str, jax.Array]] = None
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B,L,d] -> ([B,L,d], new_state{ssm,conv}). fp32 recurrence."""
+    B, L, d = x.shape
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    dt = x.dtype
+
+    xz = x @ p["w_in"].astype(dt)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, ("batch", None, "ssm_inner"))
+
+    conv_state = None if state is None else state["conv"]
+    xs, conv_state = causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    proj = xs @ p["w_x"].astype(dt)
+    dt_lr, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    delta = jax.nn.softplus(
+        (dt_lr @ p["w_dt"].astype(dt)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                   # [B,L,di]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))              # [di,N]
+
+    h0 = (jnp.zeros((B, di, N), jnp.float32) if state is None
+          else state["ssm"])
+
+    C_ = min(chunk, L)
+    pad = (-L) % C_
+    if pad:
+        xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xs_p = xs
+    nc = (L + pad) // C_
+
+    def chunk_step(h, inp):
+        xc, dc, bc, cc = inp                  # [B,C,di], [B,C,di], [B,C,N]x2
+        dA = jnp.exp(dc[..., None] * A)                        # [B,C,di,N]
+        dBx = (dc * xc.astype(jnp.float32))[..., None] \
+            * bc.astype(jnp.float32)[:, :, None, :]            # [B,C,di,N]
+        hs, h_last = _scan_chunk(dA, dBx, h)
+        yc = jnp.einsum("bcdn,bcn->bcd", hs, cc.astype(jnp.float32))
+        return h_last, yc
+
+    xs_c = xs_p.reshape(B, nc, C_, di).transpose(1, 0, 2, 3)
+    d_c = delta.reshape(B, nc, C_, di).transpose(1, 0, 2, 3)
+    b_c = Bm.reshape(B, nc, C_, N).transpose(1, 0, 2, 3)
+    c_c = Cm.reshape(B, nc, C_, N).transpose(1, 0, 2, 3)
+    h_last, ys = lax.scan(chunk_step, h0, (xs_c, d_c, b_c, c_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nc * C_, di)[:, :L]
+
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(dt) * jax.nn.silu(z))
+    out = y @ p["w_out"].astype(dt)
+    return constrain(out, ("batch", "seq", "embed")), {
+        "ssm": h_last, "conv": conv_state}
+
+
+def mamba1_state(cfg, batch: int, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return {
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+    }
+
+
+# ----------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2)
+# ----------------------------------------------------------------------
+
+def mamba2_specs(cfg) -> Dict[str, ParamSpec]:
+    d, di, N, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.conv_width
+    H = di // cfg.ssm_head_dim
+    conv_dim = di + 2 * N          # x, B, C all pass the conv
+    return {
+        "w_in": ParamSpec((d, 2 * di + 2 * N + H), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((W, conv_dim), (None, "ssm_inner"),
+                            scale=W ** -0.5),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "norm_scale": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "w_out": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: [..., T] -> [..., T, T] with out[...,i,j]=sum_{j<k<=i}; -inf above."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def mamba2_mixer(cfg, p, x: jax.Array, *, chunk: int = 64,
+                 state: Optional[Dict[str, jax.Array]] = None
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """SSD forward. x: [B,L,d]. State: {ssm:[B,H,P,N], conv:[B,W-1,conv]}"""
+    B, L, d = x.shape
+    di, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    H = di // P
+    dt = x.dtype
+
+    proj = x @ p["w_in"].astype(dt)
+    z, xBC, dt_raw = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xBC, conv_state = causal_conv1d(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    xs = constrain(xs, ("batch", None, "ssm_inner"))
+
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                            + p["dt_bias"].astype(jnp.float32))   # [B,L,H]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                   # [H]
+    dA = delta * A                                                 # [B,L,H]
+
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+    nc = (L + pad) // Q
+
+    xh = xs.reshape(B, nc, Q, H, P).transpose(1, 0, 2, 3, 4)  # [c,B,Q,H,P]
+    bh = Bm.reshape(B, nc, Q, N).transpose(1, 0, 2, 3)
+    ch = Cm.reshape(B, nc, Q, N).transpose(1, 0, 2, 3)
+    ah = dA.reshape(B, nc, Q, H).transpose(1, 0, 3, 2)        # [c,B,H,Q]
+    dh = delta.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)     # [c,B,Q,H]
+
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if state is None
+          else state["ssm"])
+
+    def chunk_step(h, inp):
+        xc, bc, cc, ac, dc = inp
+        bcf = bc.astype(jnp.float32)
+        ccf = cc.astype(jnp.float32)
+        xcf = (xc * dc[..., None]).astype(jnp.float32)   # delta-weighted x
+        a_cum = jnp.cumsum(ac, axis=-1)                  # [B,H,Q]
+        # intra-chunk (the "attention-like" quadratic term)
+        Lmat = jnp.exp(_segsum(ac))                      # [B,H,Q,Q]
+        scores = jnp.einsum("bln,bsn,bhls->bhls", ccf, bcf, Lmat)
+        y_diag = jnp.einsum("bhls,bshp->blhp", scores, xcf)
+        # inter-chunk via carried state
+        y_off = jnp.einsum("bln,bhpn,bhl->blhp", ccf, h,
+                           jnp.exp(a_cum).transpose(0, 1, 2))
+        # state update for next chunk
+        decay = jnp.exp(a_cum[..., -1:] - a_cum)         # [B,H,Q]
+        new_h = h * jnp.exp(a_cum[..., -1])[..., None, None] \
+            + jnp.einsum("bsn,bhs,bshp->bhpn", bcf, decay, xcf)
+        return new_h, (y_diag + y_off)
+
+    h_last, ys = lax.scan(chunk_step, h0, (xh, bh, ch, ah, dh))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * Q, H, P)[:, :L]
+    y = y + xs[:, :L].reshape(B, L, H, P).astype(jnp.float32) \
+        * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, L, di).astype(dt)
+
+    # gated RMSNorm (mamba2's norm-before-out)
+    y = y * jax.nn.silu(z[:, :L] if pad else z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * lax.rsqrt(var + 1e-6)
+         * p["norm_scale"].astype(jnp.float32)).astype(dt)
+    out = y @ p["w_out"].astype(dt)
+    return constrain(out, ("batch", "seq", "embed")), {
+        "ssm": h_last, "conv": conv_state}
+
+
+def mamba2_state(cfg, batch: int, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    H = cfg.d_inner // cfg.ssm_head_dim
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssm_flops_per_token(cfg, mamba2: bool = False) -> float:
+    """Projection + scan FLOPs per token (fwd)."""
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    proj = 2.0 * d * (2 * di) + 2.0 * di * d     # in/out projections
+    if mamba2:
+        H = di // cfg.ssm_head_dim
+        proj = 2.0 * d * (2 * di + 2 * N + H) + 2.0 * di * d
+        scan = 2.0 * di * N * 4                  # state update + readout
+    else:
+        proj += 2.0 * di * (cfg.dt_rank + 2 * N) + 2.0 * cfg.dt_rank * di
+        scan = 2.0 * di * N * 4
+    return proj + scan

@@ -1,0 +1,105 @@
+"""Attention-free SSM language model (falcon-mamba-7b: Mamba-1 stack)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import ssm
+from repro.models.common import (ParamSpec, apply_norm, chunked_softmax_xent,
+                                 cross_entropy, norm_spec)
+from repro.models.transformer import (_remat, stack_specs, unembed_matrix,
+                                      logits_fn, embed_tokens)
+from repro.sharding.axes import constrain
+
+Params = Dict[str, Any]
+
+
+def ssm_lm_specs(cfg) -> Params:
+    layer = {"ln": norm_spec(cfg, cfg.d_model),
+             "mixer": ssm.mamba1_specs(cfg)}
+    specs: Params = {
+        "embed": ParamSpec((cfg.padded_vocab_size, cfg.d_model),
+                           ("vocab", "embed"), scale=0.02),
+        "layers": stack_specs(layer, cfg.num_layers),
+        "final_norm": norm_spec(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, cfg.padded_vocab_size),
+                                     ("embed", "vocab"))
+    return specs
+
+
+def forward(cfg, params, tokens: jax.Array, *,
+            prefix_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = embed_tokens(cfg, params, tokens, prefix_embeds)
+
+    def body(x, lp):
+        def blk(lp, x):
+            h = apply_norm(cfg, x, lp["ln"])
+            y, _ = ssm.mamba1_mixer(cfg, lp["mixer"], h)
+            return x + y
+        return _remat(cfg, blk)(lp, x), None
+
+    x, _ = lax.scan(body, x, params["layers"])
+    x = apply_norm(cfg, x, params["final_norm"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    h, _ = forward(cfg, params, batch["tokens"])
+    B, S, d = h.shape
+    w = unembed_matrix(cfg, params).astype(h.dtype)
+    if cfg.vocab_size * S * B > 2 ** 28:
+        return chunked_softmax_xent(h.reshape(B * S, d), w,
+                                    batch["labels"].reshape(B * S))
+    return cross_entropy(h @ w, batch["labels"])
+
+
+# --- serving: recurrent state instead of a KV cache ---------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    """`max_len` is irrelevant for an SSM — state is O(1) in context."""
+    del max_len
+    L = cfg.num_layers
+    st = ssm.mamba1_state(cfg, batch, dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (L,) + x.shape), st)
+
+
+def decode_step(cfg, params, cache: Params, token: jax.Array,
+                pos: jax.Array) -> Tuple[jax.Array, Params]:
+    del pos                              # SSM decode is position-free
+    x = params["embed"].astype(jnp.bfloat16)[token][:, None, :]
+    x = constrain(x, ("batch", None, "embed"))
+
+    def body(x, inp):
+        lp, st = inp
+        h = apply_norm(cfg, x, lp["ln"])
+        y, new_st = ssm.mamba1_mixer(cfg, lp["mixer"], h, state=st)
+        return x + y, new_st
+
+    x, new_cache = lax.scan(body, x, (params["layers"], cache))
+    x = apply_norm(cfg, x, params["final_norm"])
+    return logits_fn(cfg, params, x)[:, 0], new_cache
+
+
+def prefill(cfg, params, tokens: jax.Array, cache: Params
+            ) -> Tuple[jax.Array, Params]:
+    """Run the prompt through the recurrence, returning final state."""
+    x = embed_tokens(cfg, params, tokens)
+
+    def body(x, inp):
+        lp, st = inp
+        h = apply_norm(cfg, x, lp["ln"])
+        y, new_st = ssm.mamba1_mixer(cfg, lp["mixer"], h, state=st)
+        return x + y, new_st
+
+    x, new_cache = lax.scan(body, x, (params["layers"], cache))
+    x = apply_norm(cfg, x, params["final_norm"])
+    return logits_fn(cfg, params, x[:, -1:])[:, 0], new_cache

@@ -1,0 +1,95 @@
+"""AdamW with cosine schedule, warmup, and global-norm clipping.
+
+Optimizer state inherits the parameter sharding (pass the param
+PartitionSpecs through to the state pytree), so under the fsdp plans the
+m/v moments are ZeRO-sharded for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    # bf16 moments halve optimizer HBM: the standard concession for
+    # 100B+ models on 16 GiB chips (dbrx-132b on 256 x v5e needs it).
+    moment_dtype: str = "float32"
+
+    def init(self, params: Params) -> AdamWState:
+        mdt = jnp.dtype(self.moment_dtype)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, mdt), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return self.learning_rate * warm * (0.1 + 0.9 * cos)
+
+    def update(self, grads: Params, state: AdamWState, params: Params
+               ) -> Tuple[Params, AdamWState, Dict[str, jax.Array]]:
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9)) \
+            if self.grad_clip else jnp.ones(())
+        lr = self.schedule(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        mdt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2 and self.weight_decay:   # no decay on norms/bias
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                    m.astype(mdt), v.astype(mdt))
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        outs = [upd(p, g, m, v) for p, g, m, v
+                in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

@@ -1,0 +1,62 @@
+"""Elastic re-meshing: rebuild the mesh when the device set changes.
+
+When a pod loses hosts, the surviving device count rarely matches the
+original mesh factorization.  `remesh` picks the best (data, model)
+factorization of the survivors (keeping `model` <= the old TP degree so
+TP-sharded dims still fit), and `replan_batch` rescales per-device batch
+so the global batch is preserved where divisibility allows.
+The checkpoint layer is sharding-agnostic (host npz), so restore after a
+remesh just reshards on load — that pair is the elastic-scaling story.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def factorizations(n: int) -> List[Tuple[int, int]]:
+    out = []
+    for d in range(1, int(math.isqrt(n)) + 1):
+        if n % d == 0:
+            out.append((n // d, d))
+            if d != n // d:
+                out.append((d, n // d))
+    return sorted(out)
+
+
+def best_shape(n_devices: int, *, max_model: Optional[int] = None,
+               prefer_model: int = 16) -> Tuple[int, int]:
+    """(data, model) for the survivors: model nearest prefer_model."""
+    best = None
+    for data, model in factorizations(n_devices):
+        if max_model and model > max_model:
+            continue
+        score = (abs(model - prefer_model), abs(data - n_devices // model))
+        if best is None or score < best[0]:
+            best = (score, (data, model))
+    assert best is not None
+    return best[1]
+
+
+def remesh(devices: Optional[Sequence] = None, *,
+           max_model: Optional[int] = None,
+           prefer_model: int = 16) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    data, model = best_shape(len(devices), max_model=max_model,
+                             prefer_model=prefer_model)
+    import numpy as np
+    arr = np.array(devices[: data * model]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def replan_batch(global_batch: int, old_data: int, new_data: int) -> int:
+    """Per-device batch after remesh, preserving the global batch when
+    divisible (else the smallest global batch >= target that divides)."""
+    if global_batch % new_data == 0:
+        return global_batch
+    per_dev = max(1, round(global_batch / new_data))
+    return per_dev * new_data

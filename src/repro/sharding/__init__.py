@@ -1,0 +1,1 @@
+"""Logical-axis sharding rules and parallelism plans."""

@@ -1,0 +1,73 @@
+"""Logical-axis sharding: rules + activation constraints.
+
+Params carry logical axis names in their ParamSpec (models/common.py);
+activations are constrained in model code via ``constrain(x, names)``.
+A *plan* (plans.py) resolves logical names to mesh axes.  Outside a
+mesh/rules context ``constrain`` is the identity, so single-device
+smoke tests and kernels run unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, Optional[str]]]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Dict[str, Optional[str]]):
+    prev = (current_mesh(), current_rules())
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def resolve(names: Sequence[Optional[str]],
+            rules: Optional[Dict[str, Optional[str]]] = None,
+            dims: Optional[Sequence[int]] = None,
+            mesh_sizes: Optional[Dict[str, int]] = None) -> P:
+    """Logical axis names -> PartitionSpec (mesh axis used at most once;
+    non-divisible dims stay replicated when `dims`/`mesh_sizes` given)."""
+    rules = rules if rules is not None else (current_rules() or {})
+    used = set()
+    out = []
+    for i, n in enumerate(names):
+        m = rules.get(n) if n is not None else None
+        if m is not None and dims is not None and mesh_sizes is not None:
+            axs = (m,) if isinstance(m, str) else tuple(m)
+            total = 1
+            for a in axs:
+                total *= mesh_sizes.get(a, 1)
+            if dims[i] % total:
+                m = None
+        if m is None or m in used:
+            out.append(None)
+        else:
+            used.add(m)
+            out.append(m)
+    return P(*out)
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint under the active rules (identity if none)."""
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = resolve(names, rules, dims=x.shape, mesh_sizes=sizes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

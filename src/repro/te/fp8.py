@@ -1,0 +1,110 @@
+"""FP8 numerics: formats, per-tensor scaling, delayed-scaling recipe.
+
+The paper (§III-C) dissects Nvidia's Transformer Engine: inputs/weights
+are quantized to FP8 with a per-tensor scale derived from the running
+amax history, the GEMM runs on FP8 tensor cores, and the result is
+rescaled.  This module is the same numerics stack for TPU:
+
+  * e4m3 (default fwd) / e5m2 (default grad) via ml_dtypes
+  * per-tensor scale = fp8_max / amax  (with margin), like TE
+  * DelayedScaling: amax history buffer, scale from the history max —
+    functional (history is part of the layer state, threaded explicitly)
+
+TPU v5e has no FP8 MXU (v6 does): the matmul itself upcasts fp8->bf16
+inside the kernel tile after load, so FP8 here buys *storage and
+bandwidth* (HBM/VMEM/ICI traffic halves vs bf16).  That is exactly the
+regime where the paper's Fig. 4 shows TE winning (memory-bound sizes);
+the compute-bound fp8 2x does not transfer and DESIGN.md says so.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+
+E4M3 = jnp.dtype(ml_dtypes.float8_e4m3fn)
+E5M2 = jnp.dtype(ml_dtypes.float8_e5m2)
+
+FP8_MAX = {E4M3: 448.0, E5M2: 57344.0}
+DEFAULT_MARGIN = 2.0        # keep headroom below fp8_max, like TE margin
+
+
+def amax(x: jax.Array) -> jax.Array:
+    return jnp.max(jnp.abs(x.astype(jnp.float32)))
+
+
+def compute_scale(amax_val: jax.Array, dtype=E4M3,
+                  margin: float = DEFAULT_MARGIN) -> jax.Array:
+    """scale s.t. x/scale fits the fp8 range: scale = amax*margin/fp8_max."""
+    safe = jnp.maximum(amax_val, 1e-12)
+    return safe * margin / FP8_MAX[jnp.dtype(dtype)]
+
+
+def quantize(x: jax.Array, scale: jax.Array, dtype=E4M3) -> jax.Array:
+    xs = x.astype(jnp.float32) / scale
+    lim = FP8_MAX[jnp.dtype(dtype)]
+    return jnp.clip(xs, -lim, lim).astype(dtype)
+
+
+def dequantize(xq: jax.Array, scale: jax.Array,
+               out_dtype=jnp.bfloat16) -> jax.Array:
+    return (xq.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+def quantize_rowwise(x: jax.Array, dtype=E4M3
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Per-row (last-dim-block) scaling — finer than TE's per-tensor;
+    used by the beyond-paper blockwise-fp8 option."""
+    a = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(a, 1e-12) * DEFAULT_MARGIN / FP8_MAX[jnp.dtype(dtype)]
+    return quantize(x, scale, dtype), scale
+
+
+# ----------------------------------------------------------------------
+# Delayed scaling (TE recipe): scales come from an amax *history*
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DelayedScalingRecipe:
+    history_len: int = 16
+    margin: float = DEFAULT_MARGIN
+    fwd_dtype: jnp.dtype = E4M3
+    bwd_dtype: jnp.dtype = E5M2
+
+
+def init_fp8_state(recipe: DelayedScalingRecipe,
+                   tensors: Tuple[str, ...]) -> Dict[str, jax.Array]:
+    """One amax-history row + current scale per quantized tensor."""
+    state = {}
+    for name in tensors:
+        state[name] = {
+            "history": jnp.zeros((recipe.history_len,), jnp.float32),
+            "scale": jnp.ones((), jnp.float32),
+        }
+    return state
+
+
+def update_fp8_state(recipe: DelayedScalingRecipe, st: Dict[str, jax.Array],
+                     new_amax: jax.Array, dtype) -> Dict[str, jax.Array]:
+    """Roll the history and refresh the scale from its max (TE 'delayed')."""
+    hist = jnp.roll(st["history"], 1).at[0].set(new_amax)
+    scale = compute_scale(jnp.max(hist), dtype, recipe.margin)
+    return {"history": hist, "scale": scale}
+
+
+def fp8_dot(xq: jax.Array, x_scale: jax.Array, wq: jax.Array,
+            w_scale: jax.Array, out_dtype=jnp.bfloat16) -> jax.Array:
+    """fp8 x fp8 -> out_dtype matmul with scale epilogue.
+
+    On TPU the operands upcast to bf16 on the way into the MXU; XLA
+    fuses the upcast into the dot so HBM sees only fp8 bytes.  The
+    single fused multiply by (x_scale*w_scale) is the TE epilogue.
+    """
+    acc = jnp.dot(xq.astype(jnp.bfloat16), wq.astype(jnp.bfloat16),
+                  preferred_element_type=jnp.float32)
+    return (acc * (x_scale * w_scale)).astype(out_dtype)

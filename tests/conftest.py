@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests run on the single default CPU device; distributed-semantics tests
+# spawn subprocesses with their own XLA_FLAGS (test_distributed.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

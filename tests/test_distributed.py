@@ -1,0 +1,126 @@
+"""Distributed semantics on an 8-device CPU mesh (subprocess so the
+main pytest process keeps a single device): DSM collectives, compressed
+psum, sharded train step."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, os.path.join(%(root)r, "src"))
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import dsm
+from repro.launch.mesh import make_host_mesh
+from repro.optim.compress import compressed_psum
+
+results = {}
+mesh = make_host_mesh((2, 4), ("data", "model"))
+
+# --- RBC ring copy: rank r accumulates rank r-1..r-hops -------------
+x = jnp.arange(4 * 8, dtype=jnp.float32).reshape(4, 8)
+got = dsm.rbc_ring_copy(x, mesh, "model", hops=1)
+want = x + jnp.roll(x, 1, axis=0)
+results["rbc_hops1"] = bool(jnp.allclose(got, want))
+got3 = dsm.rbc_ring_copy(x, mesh, "model", hops=3, ilp=2)
+want3 = x + jnp.roll(x, 1, 0) + jnp.roll(x, 2, 0) + jnp.roll(x, 3, 0)
+results["rbc_hops3_ilp2"] = bool(jnp.allclose(got3, want3))
+
+# --- ring latency probe: permutation correctness ---------------------
+probe = dsm.ring_latency_probe(mesh, "model")
+results["probe_perm"] = bool(
+    (np.asarray(probe).ravel() == np.roll(np.arange(4), 1)).all())
+
+# --- histograms: private+psum == bin-partitioned (concatenated) ------
+vals = jax.random.randint(jax.random.PRNGKey(0), (4 * 128,), 0, 64)
+h_priv = dsm.histogram_private_psum(vals, 64, mesh, "model")
+h_dsm = dsm.histogram_dsm(vals, 64, mesh, "model")
+np_hist = np.bincount(np.asarray(vals), minlength=64)
+results["hist_private"] = bool((np.asarray(h_priv) == np_hist).all())
+results["hist_dsm"] = bool((np.asarray(h_dsm) == np_hist).all())
+
+# --- compressed psum over the data axis -------------------------------
+y = jnp.asarray(np.random.default_rng(0).standard_normal(64),
+                jnp.float32)
+exact = y * mesh.shape["data"]
+for method in ("bf16", "int8_ef"):
+    got = compressed_psum(y, mesh, "data", method)
+    rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+    results[f"cpsum_{method}_relerr_ok"] = bool(rel < 0.02)
+
+# --- sharded 2-layer train step end to end ----------------------------
+from repro.configs import reduced_config, reduced_shape
+from repro.models import api
+from repro.optim.adamw import AdamW
+from repro.launch.train import make_train_step
+from repro.sharding import plans as plans_mod, axes as axes_mod
+
+cfg = reduced_config("yi-6b")
+shape = reduced_shape("train")
+plan = plans_mod.get_plan("fsdp_tp")
+rules = plan.param_rules
+mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+params = api.init(cfg, jax.random.PRNGKey(0))
+opt = AdamW(learning_rate=1e-3, warmup_steps=1)
+opt_state = opt.init(params)
+batch = api.make_batch(cfg, shape, jax.random.PRNGKey(1))
+pspecs = api.pspecs(cfg, rules, mesh_shape)
+shardings = jax.tree_util.tree_map(
+    lambda s: NamedSharding(mesh, s), pspecs,
+    is_leaf=lambda x: isinstance(x, P))
+params_sh = jax.device_put(params, shardings)
+step = jax.jit(make_train_step(cfg, opt))
+with mesh, axes_mod.use_rules(mesh, plan.act_rules):
+    p2, o2, m = step(params_sh, opt_state, batch)
+loss_sharded = float(m["loss"])
+p2b, o2b, mb = jax.jit(make_train_step(cfg, opt))(params, opt_state, batch)
+# cross-sharding bf16 reduction order -> small tolerance
+results["sharded_loss_matches_single"] = bool(
+    abs(loss_sharded - float(mb["loss"])) < 7e-3)
+results["sharded_loss"] = loss_sharded
+
+print(json.dumps(results))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD % {"root": ROOT}],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def test_rbc_ring_copy(dist_results):
+    assert dist_results["rbc_hops1"]
+    assert dist_results["rbc_hops3_ilp2"]
+
+
+def test_ring_latency_probe(dist_results):
+    assert dist_results["probe_perm"]
+
+
+def test_histograms_match_numpy(dist_results):
+    assert dist_results["hist_private"]
+    assert dist_results["hist_dsm"]
+
+
+def test_compressed_psum(dist_results):
+    assert dist_results["cpsum_bf16_relerr_ok"]
+    assert dist_results["cpsum_int8_ef_relerr_ok"]
+
+
+def test_sharded_train_step_matches_single_device(dist_results):
+    assert dist_results["sharded_loss_matches_single"], dist_results

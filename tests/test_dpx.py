@@ -1,0 +1,78 @@
+"""DPX function family + DP primitives (paper §III-D-1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dpx
+
+RNG = np.random.default_rng(23)
+
+
+def _ivec(n=64, lo=-100, hi=100):
+    return jnp.asarray(RNG.integers(lo, hi, n), jnp.int32)
+
+
+@pytest.mark.parametrize("name", sorted(dpx.FUSED))
+def test_fused_equals_emulated(name):
+    a, b, c = _ivec(), _ivec(), _ivec()
+    f = dpx.FUSED[name](a, b, c)
+    e = dpx.EMULATED[name](a, b, c)
+    assert (f == e).all(), name
+
+
+def test_viaddmax_semantics():
+    a = jnp.asarray([1, -5, 7], jnp.int32)
+    b = jnp.asarray([2, 3, -1], jnp.int32)
+    c = jnp.asarray([10, -10, 5], jnp.int32)
+    assert (dpx.viaddmax(a, b, c) == jnp.asarray([10, -2, 6])).all()
+    assert (dpx.viaddmax_relu(a, b, c)
+            == jnp.asarray([10, 0, 6])).all()
+
+
+def test_vibmax_predicate():
+    a = jnp.asarray([3, 1], jnp.int32)
+    b = jnp.asarray([2, 4], jnp.int32)
+    val, pred = dpx.vibmax(a, b)
+    assert (val == jnp.asarray([3, 4])).all()
+    assert (pred == jnp.asarray([True, False])).all()
+
+
+def test_tropical_matmul_identity():
+    """Tropical identity: 0 on diagonal, -inf off-diagonal."""
+    n = 8
+    NEG = jnp.iinfo(jnp.int32).min // 4
+    I = jnp.full((n, n), NEG, jnp.int32).at[jnp.arange(n),
+                                            jnp.arange(n)].set(0)
+    A = jnp.asarray(RNG.integers(-20, 20, (n, n)), jnp.int32)
+    assert (dpx.tropical_matmul(A, I) == A).all()
+    assert (dpx.tropical_matmul(I, A) == A).all()
+
+
+def test_tropical_matmul_shortest_path_semantics():
+    """min-plus powers converge to all-pairs shortest paths."""
+    INF = 10 ** 6
+    W = jnp.asarray([[0, 1, INF], [INF, 0, 2], [5, INF, 0]], jnp.int32)
+    W2 = dpx.tropical_matmul(W, W, semiring="min_plus")
+    W4 = dpx.tropical_matmul(W2, W2, semiring="min_plus")
+    assert int(W4[0, 2]) == 3          # 0->1->2
+    assert int(W4[2, 1]) == 6          # 2->0->1
+
+
+def test_smith_waterman_known_alignment():
+    # identical sequences: perfect diagonal, score = 2*len
+    s = jnp.asarray([0, 1, 2, 3, 0, 1], jnp.int32)
+    H = dpx.smith_waterman(s, s)
+    assert int(H.max()) == 12
+    # completely different alphabets: best local score is 0
+    a = jnp.zeros(6, jnp.int32)
+    b = jnp.ones(6, jnp.int32)
+    assert int(dpx.smith_waterman(a, b).max()) == 0
+
+
+def test_smith_waterman_gap_penalty():
+    # one deletion: ACGT vs AGT -> 3 matches (6) - 1 gap (1) = 5
+    a = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    b = jnp.asarray([0, 2, 3], jnp.int32)
+    assert int(dpx.smith_waterman(a, b).max()) == 5

@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py."""
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("m,n,k", [(64, 64, 64), (128, 256, 128),
+                                   (96, 64, 160), (32, 512, 64)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_matmul_sweep(m, n, k, dtype):
+    a = jnp.asarray(RNG.standard_normal((m, k)), dtype)
+    b = jnp.asarray(RNG.standard_normal((k, n)), dtype)
+    got = ops.matmul(a, b, bm=32, bn=32, bk=32)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == "bfloat16" else 1e-5,
+        atol=2e-1 if dtype == "bfloat16" else 1e-4)
+
+
+def test_matmul_int8_exact():
+    a = jnp.asarray(RNG.integers(-16, 16, (64, 96)), jnp.int8)
+    b = jnp.asarray(RNG.integers(-16, 16, (96, 64)), jnp.int8)
+    got = ops.matmul(a, b, bm=32, bn=32, bk=32)
+    assert got.dtype == jnp.int32
+    assert (got == ref.matmul(a, b)).all()
+
+
+def test_matmul_autotuned_tile():
+    """No explicit tiles: the MXU-model autotuner picks them."""
+    a = jnp.asarray(RNG.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((256, 256)), jnp.float32)
+    got = ops.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul(a, b)),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("fp8", [ml_dtypes.float8_e4m3fn,
+                                 ml_dtypes.float8_e5m2])
+def test_fp8_matmul(fp8):
+    aq = jnp.asarray(RNG.standard_normal((64, 128)), fp8)
+    bq = jnp.asarray(RNG.standard_normal((128, 64)), fp8)
+    sx, sw = jnp.float32(0.37), jnp.float32(1.9)
+    got = ops.fp8_matmul(aq, bq, sx, sw, bm=32, bn=32, bk=32)
+    want = ref.fp8_matmul(aq, bq, sx, sw)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-1)
+
+
+@pytest.mark.parametrize("B,S,H,KH,hd,causal", [
+    (2, 128, 8, 2, 32, True),
+    (1, 128, 4, 4, 64, True),
+    (2, 256, 8, 1, 32, False),
+    (1, 64, 6, 3, 16, True),
+])
+def test_flash_attention_kernel(B, S, H, KH, hd, causal):
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, KH, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, KH, hd)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_kernel_bf16():
+    B, S, H, KH, hd = 1, 128, 4, 2, 32
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((B, S, KH, hd)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((B, S, KH, hd)), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("m,n,k", [(32, 32, 32), (64, 96, 64)])
+def test_tropical_matmul_kernel(m, n, k):
+    a = jnp.asarray(RNG.integers(-50, 50, (m, k)), jnp.int32)
+    b = jnp.asarray(RNG.integers(-50, 50, (k, n)), jnp.int32)
+    got = ops.tropical_matmul(a, b)
+    assert (got == ref.tropical_matmul(a, b)).all()
+
+
+@pytest.mark.parametrize("B,la,lb", [(2, 16, 16), (4, 24, 20), (1, 40, 8),
+                                     (3, 7, 31)])
+def test_smith_waterman_kernel(B, la, lb):
+    sa = jnp.asarray(RNG.integers(0, 4, (B, la)), jnp.int32)
+    sb = jnp.asarray(RNG.integers(0, 4, (B, lb)), jnp.int32)
+    got = ops.smith_waterman(sa, sb)
+    want = ref.smith_waterman(sa, sb)
+    assert (got == want).all(), (got, want)
+
+
+def test_smith_waterman_identical_sequences():
+    """Perfect self-alignment score = match * length."""
+    s = jnp.asarray(RNG.integers(0, 4, (2, 12)), jnp.int32)
+    got = ops.smith_waterman(s, s, match=2)
+    assert (got == 24).all()
+
+
+@pytest.mark.parametrize("stages", [1, 2, 3])
+def test_async_pipeline_kernel(stages):
+    a = jnp.asarray(RNG.standard_normal((64, 128)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((128, 96)), jnp.float32)
+    got = ops.pipelined_matmul(a, b, bm=32, bn=32, bk=32, stages=stages)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.pipelined_matmul(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_single_tile_mma_analog():
+    from repro.kernels.matmul import single_tile_matmul
+    a = jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32)
+    got = single_tile_matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-4)

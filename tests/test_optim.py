@@ -1,0 +1,79 @@
+"""AdamW + gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import AdamW, global_norm
+from repro.optim.compress import (apply_ef, compress_residual,
+                                  dequantize_int8, make_ef_state,
+                                  quantize_int8)
+
+
+def test_adamw_converges_on_quadratic():
+    opt = AdamW(learning_rate=0.1, warmup_steps=1, total_steps=200,
+                weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - jnp.asarray([1.0, 2.0])))
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               [1.0, 2.0], atol=0.1)
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(learning_rate=1.0, grad_clip=1.0, warmup_steps=1)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    huge = {"w": jnp.full(4, 1e9)}
+    _, _, metrics = opt.update(huge, state, params)
+    assert float(metrics["grad_norm"]) > 1e8      # reported pre-clip
+
+
+def test_bf16_moments_roundtrip():
+    opt = AdamW(moment_dtype="bfloat16")
+    params = {"w": jnp.ones((8, 8))}
+    st = opt.init(params)
+    assert st.m["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.full((8, 8), 0.1)}
+    p2, st2, _ = opt.update(g, st, params)
+    assert st2.m["w"].dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(p2["w"])).all()
+
+
+def test_schedule_warmup_and_decay():
+    opt = AdamW(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lr0 = float(opt.schedule(jnp.asarray(1)))
+    lr10 = float(opt.schedule(jnp.asarray(10)))
+    lr100 = float(opt.schedule(jnp.asarray(100)))
+    assert lr0 < lr10
+    assert abs(lr10 - 1e-3) < 1e-9
+    assert lr100 < lr10
+
+
+def test_error_feedback_unbiased_over_steps():
+    """EF compression: accumulated error stays bounded; sum of applied
+    grads converges to the true sum."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(256), jnp.float32) * 0.1
+    err = jnp.zeros(256)
+    applied = jnp.zeros(256)
+    for _ in range(50):
+        y, err = compress_residual(g_true, err, "int8_ef")
+        applied = applied + y
+    drift = float(jnp.max(jnp.abs(applied / 50 - g_true)))
+    assert drift < 0.01, drift
+
+
+def test_apply_ef_tree():
+    grads = {"a": jnp.ones(16), "b": jnp.full((4, 4), -2.0)}
+    ef = make_ef_state(grads)
+    g2, ef2 = apply_ef(grads, ef, "int8_ef")
+    assert jax.tree_util.tree_structure(g2) == \
+        jax.tree_util.tree_structure(grads)
+    np.testing.assert_allclose(np.asarray(g2["a"]), 1.0, rtol=0.02)

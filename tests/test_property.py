@@ -1,0 +1,121 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dpx
+from repro.core.mxu_model import (MatmulModel, alignment_efficiency,
+                                  pick_tile, vmem_working_set)
+from repro.core import hw
+from repro.models.attention import attention_reference, flash_attention
+from repro.optim.compress import dequantize_int8, quantize_int8
+from repro.te import fp8
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                min_size=4, max_size=64))
+@settings(**SETTINGS)
+def test_fp8_quant_never_overflows(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    scale = fp8.compute_scale(fp8.amax(x), fp8.E4M3)
+    xq = fp8.quantize(x, scale, fp8.E4M3)
+    assert np.isfinite(np.asarray(xq, np.float32)).all()
+
+
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(2, 6),
+       st.integers(0, 10 ** 6))
+@settings(**SETTINGS)
+def test_tropical_matmul_associative(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.integers(-50, 50, (m, k)), jnp.int32)
+    B = jnp.asarray(rng.integers(-50, 50, (k, n)), jnp.int32)
+    C = jnp.asarray(rng.integers(-50, 50, (n, m)), jnp.int32)
+    left = dpx.tropical_matmul(dpx.tropical_matmul(A, B), C)
+    right = dpx.tropical_matmul(A, dpx.tropical_matmul(B, C))
+    assert (left == right).all()
+
+
+@given(st.integers(1, 4), st.integers(4, 32), st.integers(1, 4),
+       st.integers(0, 10 ** 6))
+@settings(**SETTINGS)
+def test_flash_equals_reference_property(b, s, kh, seed):
+    h = kh * 2
+    hd = 8
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kh, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, q_chunk=8, kv_chunk=8)
+    want = attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=8, max_size=128))
+@settings(**SETTINGS)
+def test_int8_compression_error_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = quantize_int8(x)
+    xd = dequantize_int8(q, s)
+    # max error is half a quantization step
+    step = float(s)
+    assert float(jnp.max(jnp.abs(xd - x))) <= step * 0.5 + 1e-6
+
+
+@given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 4096))
+@settings(**SETTINGS)
+def test_mxu_alignment_efficiency_bounds(m, n, k):
+    eff = alignment_efficiency(m, n, k)
+    assert 0 < eff <= 1.0
+    # aligned shapes are perfectly efficient
+    assert alignment_efficiency(128, 128, 128) == 1.0
+
+
+@given(st.sampled_from([256, 512, 1024, 4096, 8192]),
+       st.sampled_from([256, 512, 1024, 4096]),
+       st.sampled_from([256, 512, 2048]))
+@settings(**SETTINGS)
+def test_autotuner_tile_fits_vmem(m, n, k):
+    t = pick_tile(m, n, k, "bfloat16")
+    assert vmem_working_set(t.bm, t.bn, t.bk, "bfloat16") \
+        <= hw.TPU_V5E.vmem_bytes
+    assert t.predicted_flops_per_s > 0
+
+
+@given(st.integers(2, 64), st.integers(1, 8), st.integers(0, 10 ** 6))
+@settings(**SETTINGS)
+def test_moe_router_weights_normalized(tokens, seed_k, seed):
+    import dataclasses
+    from repro.configs import reduced_config
+    from repro.models import api, moe
+    cfg = reduced_config("dbrx-132b")
+    rng = np.random.default_rng(seed)
+    params = api.init(cfg, jax.random.PRNGKey(seed % 1000))
+    lp = jax.tree_util.tree_map(lambda p: p[0], params["layers"])
+    x = jnp.asarray(rng.standard_normal((tokens, cfg.d_model)),
+                    jnp.float32)
+    gates, idx, aux = moe.route(cfg, lp["moe"], x)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(idx) < cfg.num_experts).all()
+    assert float(aux) > 0.3              # aux loss in a sane range
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_sw_score_invariances(seed):
+    """Smith-Waterman: score(a,b) == score(b,a); appending garbage
+    never lowers the best local score."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 4, 12), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 4, 10), jnp.int32)
+    s_ab = int(dpx.smith_waterman(a, b).max())
+    s_ba = int(dpx.smith_waterman(b, a).max())
+    assert s_ab == s_ba
+    a_ext = jnp.concatenate([a, jnp.asarray(rng.integers(0, 4, 4),
+                                            jnp.int32)])
+    assert int(dpx.smith_waterman(a_ext, b).max()) >= s_ab

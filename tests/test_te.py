@@ -1,0 +1,126 @@
+"""Transformer-Engine analog: fp8 numerics, delayed scaling, layers."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.llama_te import te_layer_config
+from repro.models.common import init_params
+from repro.te import fp8
+from repro.te.fp8 import E4M3, E5M2, DelayedScalingRecipe
+from repro.te.layer import (layernorm_mlp_specs, layernorm_mlp_state,
+                            te_layernorm_mlp, te_transformer_layer,
+                            transformer_layer_specs,
+                            transformer_layer_state)
+from repro.te.linear import (fp8_matmul, init_state, linear_reference,
+                             te_linear, te_linear_specs)
+
+RECIPE = DelayedScalingRecipe()
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (512,), jnp.float32) * 10
+    scale = fp8.compute_scale(fp8.amax(x), E4M3)
+    xq = fp8.quantize(x, scale, E4M3)
+    xd = fp8.dequantize(xq, scale, jnp.float32)
+    # e4m3 has ~2 decimal digits; relative error per element < 2^-2 after
+    # margin, typical much less
+    rel = np.abs(np.asarray(xd - x)) / (np.abs(np.asarray(x)) + 1e-6)
+    assert np.median(rel) < 0.05
+    assert rel.max() < 0.3
+
+
+def test_e5m2_wider_range():
+    big = jnp.asarray([30000.0], jnp.float32)
+    s = jnp.ones(())
+    assert np.isfinite(float(fp8.dequantize(
+        fp8.quantize(big, s, E5M2), s)[0]))
+    # e4m3 saturates at 448
+    assert float(fp8.dequantize(fp8.quantize(big, s, E4M3), s)[0]) <= 448.0
+
+
+def test_delayed_scaling_tracks_amax():
+    st = fp8.init_fp8_state(RECIPE, ("x",))["x"]
+    for amax in (1.0, 2.0, 1000.0, 1.0):
+        st = fp8.update_fp8_state(RECIPE, st, jnp.asarray(amax), E4M3)
+    # history keeps the 1000 spike -> scale reflects the max over history
+    expected = fp8.compute_scale(jnp.asarray(1000.0), E4M3)
+    np.testing.assert_allclose(float(st["scale"]), float(expected),
+                               rtol=1e-6)
+
+
+def test_te_linear_close_to_bf16():
+    params = init_params(te_linear_specs(128, 256), jax.random.PRNGKey(0))
+    st = init_state(RECIPE)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 128), jnp.bfloat16)
+    y, st = te_linear(params, st, x, RECIPE)     # warm scales
+    y, st = te_linear(params, st, x, RECIPE)
+    ref = linear_reference(params, x)
+    rel = float(jnp.linalg.norm((y - ref).astype(jnp.float32))
+                / jnp.linalg.norm(ref.astype(jnp.float32)))
+    assert rel < 0.08, rel
+
+
+def test_te_linear_grads_flow():
+    params = init_params(te_linear_specs(64, 64), jax.random.PRNGKey(0))
+    st = init_state(RECIPE)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 64), jnp.bfloat16)
+
+    def loss(p, xx):
+        y, _ = te_linear(p, st, xx, RECIPE)
+        return jnp.sum(jnp.square(y.astype(jnp.float32)))
+
+    gw = jax.grad(loss)(params, x)["w"]
+    gx = jax.grad(loss, argnums=1)(params, x)
+    assert np.isfinite(np.asarray(gw)).all()
+    assert np.isfinite(np.asarray(gx, np.float32)).all()
+    assert float(jnp.abs(gw).sum()) > 0
+
+
+def test_fp8_grad_close_to_bf16_grad():
+    params = init_params(te_linear_specs(64, 64), jax.random.PRNGKey(0))
+    st = init_state(RECIPE)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 64), jnp.float32)
+
+    def loss_fp8(p):
+        y, _ = te_linear(p, st, x, RECIPE)
+        return jnp.mean(jnp.square(y.astype(jnp.float32)))
+
+    def loss_ref(p):
+        return jnp.mean(jnp.square(linear_reference(p, x).astype(
+            jnp.float32)))
+
+    g1 = jax.grad(loss_fp8)(params)["w"]
+    g2 = jax.grad(loss_ref)(params)["w"]
+    cos = float(jnp.sum(g1 * g2) / (jnp.linalg.norm(g1)
+                                    * jnp.linalg.norm(g2)))
+    assert cos > 0.97, cos
+
+
+def test_te_layernorm_mlp():
+    cfg = te_layer_config(1024)
+    p = init_params(layernorm_mlp_specs(cfg), jax.random.PRNGKey(0))
+    st = layernorm_mlp_state(cfg, RECIPE)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 1024),
+                          jnp.bfloat16)
+    y, st2 = te_layernorm_mlp(cfg, p, st, x, RECIPE)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+
+
+def test_te_transformer_layer_paper_shapes():
+    for hidden in (1024, 2048):
+        cfg = te_layer_config(hidden)
+        p = init_params(transformer_layer_specs(cfg), jax.random.PRNGKey(0))
+        st = transformer_layer_state(cfg, RECIPE)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, hidden),
+                              jnp.bfloat16)
+        y, st2 = te_transformer_layer(cfg, p, st, x, RECIPE)
+        assert y.shape == x.shape
+        assert np.isfinite(np.asarray(y, np.float32)).all()
+        # state rolled: histories not all zero after one step
+        hist = st2["wq"]["x"]["history"]
+        assert float(jnp.max(hist)) > 0
