@@ -3,14 +3,22 @@
 The paper serves Llama variants over ShareGPT-derived request lengths
 (max input 128 / max output 128, batch 8) and reports
 (input+output)/time.  Same protocol here on the reduced llama-te-mini
-config with the continuous-batching server, across fp32/bf16 parameter
-dtypes (fp8 storage variant = te path, measured at the layer level in
-te_linear; full fp8 serving is modeled).
+config, A/B-ing the two serving engines on an identical request mix:
+
+  * slot-server   — seed baseline: token-at-a-time prefill scan, one
+    compile per distinct prompt length, host sync every decode step
+  * chunked-server— Sarathi-style chunked prefill + device-resident
+    decode spans, O(1) compiled programs
+
+Also reports the prefill/decode wall-time split, the compiled-program
+counts, and greedy-output parity.  `benchmarks/run.py` snapshots the
+same numbers to BENCH_serving.json for cross-PR perf trajectories.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -19,28 +27,69 @@ from repro.configs.llama_te import CONFIG as MINI
 from repro.core.bench import register
 from repro.core.timer import Timing
 from repro.models import api
-from repro.runtime.server import Server, sharegpt_like_requests
+from repro.runtime.server import (ChunkedServer, SlotServer,
+                                  clone_requests, sharegpt_like_requests)
+
+# Snapshot of the last llm_generation run, keyed by param dtype;
+# benchmarks/run.py serializes it to BENCH_serving.json.
+SERVING_RESULTS: Dict[str, Dict[str, float]] = {}
 
 
 @register("llm_generation", "Table XII")
 def llm_generation():
     rows = []
+    SERVING_RESULTS.clear()
     cfg = dataclasses.replace(MINI, num_layers=4, d_model=256,
                               num_heads=4, num_kv_heads=4, d_ff=768,
                               vocab_size=8192, remat="none")
+    base_reqs = sharegpt_like_requests(8, cfg.vocab_size, max_input=32,
+                                       max_output=16, seed=0)
     for dtype_name in ("float32", "bfloat16"):
         params = api.init(cfg, jax.random.PRNGKey(0))
         if dtype_name == "bfloat16":
             params = jax.tree_util.tree_map(
                 lambda p: p.astype(jnp.bfloat16) if p.ndim >= 2 else p,
                 params)
-        srv = Server(cfg, params, batch_slots=4, max_len=96)
-        reqs = sharegpt_like_requests(8, cfg.vocab_size, max_input=32,
-                                      max_output=16, seed=0)
-        stats = srv.serve(reqs)
+        slot_reqs = clone_requests(base_reqs)
+        slot_stats = SlotServer(cfg, params, batch_slots=4,
+                                max_len=96).serve(slot_reqs)
+        chunk_reqs = clone_requests(base_reqs)
+        srv = ChunkedServer(cfg, params, batch_slots=4, max_len=96,
+                            chunk=16, span=8)
+        stats = srv.serve(chunk_reqs)
+        speedup = (stats["tokens_per_s"] / slot_stats["tokens_per_s"]
+                   if slot_stats["tokens_per_s"] > 0 else 0.0)
+        parity = float(all(a.output == b.output
+                           for a, b in zip(slot_reqs, chunk_reqs)))
+        busy = stats["prefill_seconds"] + stats["decode_seconds"]
+        prefill_frac = stats["prefill_seconds"] / busy if busy else 0.0
         rows.append(Timing(
-            f"measured(cpu)/llama-mini/{dtype_name}", 0.0, 0, 1,
+            f"measured(cpu)/slot-server/{dtype_name}", 0.0, 0, 1,
+            derived=slot_stats["tokens_per_s"],
+            derived_name="tokens_per_s"))
+        rows.append(Timing(
+            f"measured(cpu)/chunked-server/{dtype_name}", 0.0, 0, 1,
             derived=stats["tokens_per_s"], derived_name="tokens_per_s"))
+        rows.append(Timing(
+            f"measured(cpu)/chunked-vs-slot-speedup/{dtype_name}",
+            0.0, 0, 1, derived=speedup, derived_name="x"))
+        rows.append(Timing(
+            f"measured(cpu)/chunked-prefill-frac/{dtype_name}",
+            0.0, 0, 1, derived=prefill_frac, derived_name="frac"))
+        rows.append(Timing(
+            f"measured(cpu)/greedy-output-parity/{dtype_name}",
+            0.0, 0, 1, derived=parity, derived_name="bool"))
+        SERVING_RESULTS[dtype_name] = {
+            "slot_tokens_per_s": slot_stats["tokens_per_s"],
+            "chunked_tokens_per_s": stats["tokens_per_s"],
+            "speedup": speedup,
+            "prefill_seconds": stats["prefill_seconds"],
+            "decode_seconds": stats["decode_seconds"],
+            "prefill_tokens": stats["prefill_tokens"],
+            "decode_tokens": stats["decode_tokens"],
+            "compile_counts": srv.compile_counts(),
+            "outputs_identical": bool(parity),
+        }
     # paper reference points (H800, llama-2-7B)
     for name, tps in (("paper/H800/llama2-7B/fp32", 568.91),
                       ("paper/H800/llama2-7B/bf16", 502.65),

@@ -3,10 +3,15 @@
     PYTHONPATH=src python -m benchmarks.run [names...]
 
 Prints ``name,us_per_call,derived`` CSV (plus # section markers).
+After a run that includes ``llm_generation``, writes the serving
+numbers (tokens/s, prefill/decode split, compile counts, parity) to
+``BENCH_serving.json`` so future PRs have a perf trajectory to compare
+against.
 """
 
 from __future__ import annotations
 
+import json
 import sys
 
 # importing registers every benchmark
@@ -15,10 +20,16 @@ from benchmarks import (async_copy, dpx, dsm, llm_gen, memory,  # noqa: F401
                         tensorcore)
 from repro.core.bench import run_all
 
+SERVING_JSON = "BENCH_serving.json"
+
 
 def main() -> None:
     names = sys.argv[1:] or None
     failures = run_all(names)
+    if llm_gen.SERVING_RESULTS:
+        with open(SERVING_JSON, "w") as f:
+            json.dump(llm_gen.SERVING_RESULTS, f, indent=2, sort_keys=True)
+        print(f"# wrote {SERVING_JSON}")
     if failures:
         raise SystemExit(f"{failures} benchmark(s) failed")
 

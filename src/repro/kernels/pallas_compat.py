@@ -1,0 +1,14 @@
+"""Version-portability shims for Pallas TPU APIs.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+depending on the installed jax exactly one of the two names resolves
+(the other raises the deprecation AttributeError).  Kernels import the
+resolved class from here so they compile against either release line.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                  or getattr(pltpu, "TPUCompilerParams"))

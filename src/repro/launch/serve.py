@@ -15,14 +15,24 @@ import jax
 
 from repro.configs import get_config, list_archs, reduced_config
 from repro.models import api
-from repro.runtime.server import Server, sharegpt_like_requests
+from repro.runtime.server import (ChunkedServer, SlotServer,
+                                  sharegpt_like_requests)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b", choices=list_archs())
+    ap.add_argument("--engine", default="chunked",
+                    choices=("chunked", "slot"),
+                    help="chunked-prefill scheduler (default) or the "
+                         "legacy slot baseline")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk size (chunked engine)")
+    ap.add_argument("--span", type=int, default=8,
+                    help="device-resident decode steps per dispatch "
+                         "(chunked engine)")
     ap.add_argument("--max-input", type=int, default=32)
     ap.add_argument("--max-output", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
@@ -31,21 +41,31 @@ def main() -> None:
     cfg = reduced_config(args.arch)
     if cfg.family not in ("dense", "moe", "vlm"):
         raise SystemExit(
-            f"{args.arch} ({cfg.family}): the slot server currently "
-            "drives the transformer decode path; SSM/hybrid/enc-dec "
+            f"{args.arch} ({cfg.family}): the serving engines currently "
+            "drive the transformer decode path; SSM/hybrid/enc-dec "
             "decode is exercised via api.decode_step (see tests).")
     params = api.init(cfg, jax.random.PRNGKey(args.seed))
-    srv = Server(cfg, params, batch_slots=args.slots,
-                 max_len=args.max_input + args.max_output + 8)
+    max_len = args.max_input + args.max_output + 8
+    if args.engine == "chunked":
+        srv = ChunkedServer(cfg, params, batch_slots=args.slots,
+                            max_len=max_len, chunk=args.chunk,
+                            span=args.span)
+    else:
+        srv = SlotServer(cfg, params, batch_slots=args.slots,
+                         max_len=max_len)
     reqs = sharegpt_like_requests(args.requests, cfg.vocab_size,
                                   max_input=args.max_input,
                                   max_output=args.max_output,
                                   seed=args.seed)
     stats = srv.serve(reqs)
-    print(f"arch={args.arch} requests={int(stats['requests'])} "
+    print(f"arch={args.arch} engine={args.engine} "
+          f"requests={int(stats['requests'])} "
           f"tokens={int(stats['tokens'])} "
           f"throughput={stats['tokens_per_s']:.1f} tok/s "
           f"(paper Table XII protocol)")
+    print(f"  prefill={stats['prefill_seconds']:.2f}s "
+          f"decode={stats['decode_seconds']:.2f}s "
+          f"compiled_programs={sum(max(v, 0) for v in srv.compile_counts().values())}")
 
 
 if __name__ == "__main__":

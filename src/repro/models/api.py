@@ -5,6 +5,8 @@ Used by launch/{dryrun,train,serve}.py, tests and benchmarks:
     param_shapes / init / abstract / pspecs     parameters
     loss_fn                                     training objective
     init_cache / prefill / decode_step          serving
+    chunk_step                                  chunked-prefill serving
+    compile_count                               jit program-cache probe
     input_specs / make_batch                    shape cells (dry-run / smoke)
     model_flops                                 6ND-style accounting
 """
@@ -87,6 +89,37 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
     if cfg.family == "encdec":
         return encdec.decode_step(cfg, params, cache, token, pos)
     raise ValueError(cfg.family)
+
+
+def chunk_step(cfg: ModelConfig, params: Params, cache: Params,
+               tokens: jax.Array, pos: jax.Array, n_tokens: jax.Array
+               ) -> Tuple[jax.Array, Params]:
+    """Chunk-write serving step: per slot, write `n_tokens[b]` of the
+    C-wide `tokens[b]` into the KV cache at `pos[b]` and return logits
+    at each slot's last valid row.  Fixed (B, C) shape -> one compile
+    regardless of the prompt-length distribution (runtime/server.py)."""
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.chunk_step(cfg, params, cache, tokens, pos,
+                                      n_tokens)
+    raise NotImplementedError(
+        f"chunked prefill is transformer-only for now (family "
+        f"{cfg.family}); use prefill/decode_step")
+
+
+def compile_count(fn) -> int:
+    """Number of programs a jitted callable has compiled (-1 unknown).
+
+    Probes the jit program cache (`_cache_size`), which exists on
+    jax.jit wrappers across the supported jax versions; servers expose
+    this so tests/benchmarks can assert O(1) compilation.
+    """
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return -1
+    try:
+        return int(probe())
+    except Exception:  # noqa: BLE001 - diagnostics only, never raise
+        return -1
 
 
 def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],

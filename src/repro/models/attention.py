@@ -433,13 +433,46 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return o.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def chunk_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                    q_positions: jax.Array) -> jax.Array:
+    """Chunked-prefill attention: a C-token query chunk vs the KV cache.
+
+    q: [B,C,H,hd]; k_cache/v_cache: [B,T,KH,hd]; q_positions: [B,C]
+    absolute positions of the chunk rows (per-slot `pos + arange(C)`).
+    Cache-aware causal mask: row i attends cache position t iff
+    t <= q_positions[b, i] — the chunk's own k/v must already be written
+    at those positions (update_cache with the chunk, then attend).
+
+    One C-row block of the blockwise flash sweep: live memory is
+    O(C * T) scores (C is the chunk size, 16-64), never O(S^2).
+    Rows past a slot's valid token count attend garbage but only
+    produce garbage in their own output rows, which callers discard.
+    """
+    B, C, H, hd = q.shape
+    T, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    qg = q.reshape(B, C, KH, G, hd)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k_cache,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    mask = jnp.arange(T)[None, None, :] <= q_positions[:, :, None]  # [B,C,T]
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, C, H, hd).astype(q.dtype)
+
+
 def update_cache(cache_k: jax.Array, cache_v: jax.Array, k1: jax.Array,
                  v1: jax.Array, pos: jax.Array
                  ) -> Tuple[jax.Array, jax.Array]:
-    """Write one decode step's k/v ([B,1,KH,hd]) at `pos` into [B,T,KH,hd].
+    """Write a step's k/v ([B,C,KH,hd], C=1 for decode or a whole
+    prefill chunk) at `pos` into [B,T,KH,hd].
 
     `pos` may be a scalar (lockstep decode) or a per-slot [B] vector
-    (continuous batching, runtime/server.py).
+    (continuous batching / chunked prefill, runtime/server.py).  Callers
+    must keep `pos + C <= T` — dynamic_update_slice clamps the start
+    index, so an out-of-range chunk write would silently shift onto the
+    tail of the cache (servers allocate T = max_len + chunk headroom).
     """
     pos = jnp.asarray(pos)
     if pos.ndim == 1:

@@ -220,6 +220,55 @@ def decode_step(cfg, params, cache: Params, token: jax.Array,
     return logits, {"k": new_k, "v": new_v}
 
 
+def chunk_step(cfg, params, cache: Params, tokens: jax.Array,
+               pos: jax.Array, n_tokens: jax.Array
+               ) -> Tuple[jax.Array, Params]:
+    """One chunked-prefill/decode step for a batch of server slots.
+
+    tokens [B,C] int32 — per slot, the next `n_tokens[b]` tokens of its
+    request (a C-token prefill chunk, a single decode token at row 0, or
+    nothing for an idle slot; rows past n_tokens[b] are padding).
+    pos [B] int32 — each slot's current cache length; the chunk's k/v is
+    written at cache positions [pos, pos+C) (padding rows included —
+    they sit beyond the valid frontier, are never attended by valid
+    queries, and the next step's write starts at the new frontier so
+    they are overwritten before becoming visible).
+    n_tokens [B] int32 in [0, C].
+
+    Returns (logits [B, vocab] at each slot's last valid row, cache).
+    Shapes are fixed by (B, C) only, so a server compiles this once no
+    matter how prompt lengths are distributed.
+    """
+    B, C = tokens.shape
+    x = params["embed"].astype(jnp.bfloat16)[tokens]          # [B,C,d]
+    x = constrain(x, ("batch", None, "embed"))
+    positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        h = apply_norm(cfg, x, lp["ln1"])
+        q, k, v = attn.qkv_project(cfg, lp["attn"], h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        ck, cv = attn.update_cache(ck, cv, k, v, pos)
+        o = attn.chunk_attention(q, ck, cv, positions)
+        x = x + attn.out_project(lp["attn"], o)
+        h = apply_norm(cfg, x, lp["ln2"])
+        if cfg.family == "moe":
+            y, _ = moe_mod.moe_mlp(cfg, lp["moe"], h)
+        else:
+            y = mlp_mod.mlp(cfg, lp["mlp"], h)
+        return x + y, (ck, cv)
+
+    x, (new_k, new_v) = lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(cfg, x, params["final_norm"])
+    last = jnp.clip(n_tokens - 1, 0, C - 1)                   # [B]
+    h_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # [B,1,d]
+    logits = logits_fn(cfg, params, h_last)[:, 0]
+    return logits, {"k": new_k, "v": new_v}
+
+
 def prefill(cfg, params, tokens: jax.Array, cache: Params,
             *, prefix_embeds: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Params]:

@@ -1,14 +1,28 @@
 """LLM serving loop with continuous batching (paper §III-C-3 analog).
 
 The paper measures generation throughput on Llama with ShareGPT-derived
-request lengths (Table XII).  This server reproduces the setup:
+request lengths (Table XII).  Two engines reproduce the setup:
 
-  * synthetic ShareGPT-like request mix (log-normal in/out lengths,
-    clamped to max_input/max_output — the paper uses 128/128)
-  * slot-based continuous batching: a fixed decode batch whose slots are
-    refilled per step from the queue (per-slot positions/KV writes via
-    the vector-`pos` decode path)
-  * throughput metric = (input_len + output_len) / time, theirs exactly
+``ChunkedServer`` (default, exported as ``Server``) — Sarathi-style
+chunked prefill: prompts are bucketed into fixed C-token chunks and
+packed, together with the single-token decodes of ongoing requests,
+into ONE fixed-shape jitted step (`models.transformer.chunk_step`).
+Decode-only stretches run a device-resident K-step `lax.scan` span:
+greedy argmax, position advance, active-slot masking and stop detection
+all happen on device; the host only mirrors the (deterministic)
+bookkeeping and transfers tokens when harvesting finished requests.
+Because every compiled program has a shape fixed by (slots, chunk,
+span), the engine compiles O(1) programs no matter how prompt lengths
+are distributed (probe: ``compile_counts()``).
+
+``SlotServer`` — the original engine, kept as the measured baseline:
+prefill feeds one token per ``decode_step`` through a scan and
+recompiles per distinct prompt length; the decode loop syncs to the
+host every step.  `benchmarks/llm_gen.py` reports both.
+
+Both engines emit identical greedy token sequences: the chunked path's
+per-slot math (bf16 activations, fp32 softmax over the masked cache)
+matches the token-at-a-time decode path bit for bit.
 """
 
 from __future__ import annotations
@@ -20,6 +34,7 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.models import api, transformer
@@ -50,8 +65,263 @@ def sharegpt_like_requests(n: int, vocab: int, *, max_input: int = 128,
     return reqs
 
 
-class Server:
-    """Slot-based continuous-batching decode server (transformer family)."""
+def clone_requests(reqs: List[Request]) -> List[Request]:
+    """Fresh Request objects for re-serving the same mix (A/B runs)."""
+    return [Request(rid=r.rid, prompt=r.prompt.copy(), max_new=r.max_new)
+            for r in reqs]
+
+
+# ----------------------------------------------------------------------
+# Chunked-prefill engine (default)
+# ----------------------------------------------------------------------
+
+class ChunkedServer:
+    """Chunked-prefill continuous-batching server (transformer family).
+
+    Fixed-shape work units:
+      * chunk step  — [slots, chunk] tokens; prefilling slots consume up
+        to `chunk` prompt tokens, decoding slots piggyback their next
+        token at row 0 (Sarathi-style coalescing).
+      * decode span — `span` consecutive decode steps scanned on device
+        when no prefill is pending.
+
+    The host mirrors position/emission bookkeeping in numpy — greedy
+    decoding with length-only stopping is fully deterministic, so the
+    mirror never needs to read device state; tokens cross to the host
+    only when a finished request is harvested.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Params, *,
+                 batch_slots: int = 8, max_len: int = 512,
+                 chunk: int = 16, span: int = 8):
+        assert cfg.family in ("dense", "moe", "vlm")
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.chunk = chunk
+        self.span = span
+        # + chunk headroom: chunk writes start at the valid frontier and
+        # must never clamp (see attention.update_cache)
+        self.cache = api.init_cache(cfg, batch_slots, max_len + chunk)
+        self.cur_tok = jnp.zeros((batch_slots,), jnp.int32)
+        self.out_buf = jnp.zeros((batch_slots, max_len), jnp.int32)
+        # host-owned mirror (deterministic; never read back from device)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.out_len = np.zeros(batch_slots, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.mode = ["idle"] * batch_slots    # idle | prefill | decode | done
+        self.prompt_off = np.zeros(batch_slots, np.int64)
+        self._chunk_fn = jax.jit(self._chunk_impl)
+        self._span_fn = jax.jit(self._span_impl)
+
+    # -- jitted work units ------------------------------------------------
+    def _chunk_impl(self, params, cache, cur_tok, out_buf, tokens_host,
+                    pos, n_tokens, is_decode, emit, out_len):
+        B, C = tokens_host.shape
+        col0 = jnp.arange(C, dtype=jnp.int32) == 0
+        tokens = jnp.where(is_decode[:, None] & col0[None, :],
+                           cur_tok[:, None], tokens_host)
+        logits, cache = transformer.chunk_step(
+            self.cfg, params, cache, tokens, pos, n_tokens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cur_tok = jnp.where(emit, nxt, cur_tok)
+        row = jnp.arange(B)
+        idx = jnp.clip(out_len, 0, out_buf.shape[1] - 1)
+        out_buf = out_buf.at[row, idx].set(
+            jnp.where(emit, nxt, out_buf[row, idx]))
+        return cache, cur_tok, out_buf
+
+    def _span_impl(self, params, cache, cur_tok, out_buf, pos, out_len,
+                   active, max_new):
+        row = jnp.arange(self.B)
+        cap = self.max_len - 1
+
+        def step(carry, _):
+            cache, tok, pos, out_buf, out_len, active = carry
+            logits, cache = transformer.decode_step(
+                self.cfg, params, cache, tok, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            idx = jnp.clip(out_len, 0, out_buf.shape[1] - 1)
+            out_buf = out_buf.at[row, idx].set(
+                jnp.where(active, nxt, out_buf[row, idx]))
+            inc = active.astype(jnp.int32)
+            out_len = out_len + inc
+            pos = pos + inc
+            tok = jnp.where(active, nxt, tok)
+            active = active & (out_len < max_new) & (pos < cap)
+            return (cache, tok, pos, out_buf, out_len, active), None
+
+        carry = (cache, cur_tok, pos, out_buf, out_len, active)
+        carry, _ = lax.scan(step, carry, None, length=self.span)
+        cache, cur_tok, _, out_buf, _, _ = carry
+        return cache, cur_tok, out_buf
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Programs compiled per work unit — O(1) by construction."""
+        return {"chunk_step": api.compile_count(self._chunk_fn),
+                "decode_span": api.compile_count(self._span_fn)}
+
+    # -- host-side scheduling --------------------------------------------
+    def _admit(self, queue: List[Request]) -> None:
+        for s in range(self.B):
+            if self.slot_req[s] is None and queue:
+                req = queue.pop(0)
+                if len(req.prompt) > self.max_len:
+                    # out-of-range cache writes would clamp and silently
+                    # corrupt the slot's tail (see attention.update_cache)
+                    raise ValueError(
+                        f"request {req.rid}: prompt length "
+                        f"{len(req.prompt)} exceeds max_len {self.max_len}")
+                self.slot_req[s] = req
+                self.mode[s] = "prefill"
+                self.prompt_off[s] = 0
+                self.pos[s] = 0
+                self.out_len[s] = 0
+
+    def _check_done(self, s: int) -> None:
+        # stop rule, applied after every emit (including the first token
+        # from the final prefill chunk, so max_new=1 yields one token;
+        # SlotServer applies the same post-admission check)
+        req = self.slot_req[s]
+        if (self.out_len[s] >= req.max_new
+                or self.pos[s] >= self.max_len - 1):
+            self.mode[s] = "done"
+
+    def _run_chunk_step(self) -> int:
+        """One packed step: prefill chunks + piggybacked decodes."""
+        B, C = self.B, self.chunk
+        tokens_host = np.zeros((B, C), np.int32)
+        n_tokens = np.zeros(B, np.int32)
+        is_decode = np.zeros(B, bool)
+        emit = np.zeros(B, bool)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.mode[s] == "prefill":
+                off = int(self.prompt_off[s])
+                n = min(C, len(req.prompt) - off)
+                tokens_host[s, :n] = req.prompt[off:off + n]
+                n_tokens[s] = n
+                emit[s] = off + n == len(req.prompt)
+            elif self.mode[s] == "decode":
+                n_tokens[s] = 1
+                is_decode[s] = True
+                emit[s] = True
+        self.cache, self.cur_tok, self.out_buf = self._chunk_fn(
+            self.params, self.cache, self.cur_tok, self.out_buf,
+            tokens_host, self.pos.copy(), n_tokens, is_decode, emit,
+            self.out_len.copy())
+        self.cur_tok.block_until_ready()
+        prompt_tokens = 0
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.mode[s] == "prefill":
+                n = int(n_tokens[s])
+                prompt_tokens += n
+                self.prompt_off[s] += n
+                self.pos[s] += n
+                if emit[s]:                 # prompt exhausted: first token
+                    self.mode[s] = "decode"
+                    self.out_len[s] += 1
+                    self._check_done(s)
+            elif self.mode[s] == "decode":
+                self.out_len[s] += 1
+                self.pos[s] += 1
+                self._check_done(s)
+        return prompt_tokens
+
+    def _run_decode_span(self) -> None:
+        active = np.array([m == "decode" for m in self.mode])
+        max_new = np.array(
+            [r.max_new if r is not None else 0 for r in self.slot_req],
+            np.int32)
+        self.cache, self.cur_tok, self.out_buf = self._span_fn(
+            self.params, self.cache, self.cur_tok, self.out_buf,
+            self.pos.copy(), self.out_len.copy(), active, max_new)
+        self.cur_tok.block_until_ready()
+        # deterministic mirror of the on-device span
+        cap = self.max_len - 1
+        for _ in range(self.span):
+            for s in np.flatnonzero(active):
+                self.out_len[s] += 1
+                self.pos[s] += 1
+                if (self.out_len[s] >= max_new[s] or self.pos[s] >= cap):
+                    active[s] = False
+                    self.mode[s] = "done"
+
+    def _harvest(self) -> int:
+        done_slots = [s for s in range(self.B) if self.mode[s] == "done"]
+        if not done_slots:
+            return 0
+        buf = np.asarray(self.out_buf)     # only host transfer of tokens
+        served = 0
+        for s in done_slots:
+            req = self.slot_req[s]
+            req.output = [int(t) for t in buf[s, : int(self.out_len[s])]]
+            req.done = True
+            served += len(req.prompt) + len(req.output)
+            self.slot_req[s] = None
+            self.mode[s] = "idle"
+        return served
+
+    # -- main loop ---------------------------------------------------------
+    def serve(self, requests: List[Request]) -> Dict[str, float]:
+        queue = list(requests)
+        t0 = time.perf_counter()
+        served_tokens = 0
+        prefill_s = decode_s = 0.0
+        prefill_tokens = decode_steps = chunk_steps = spans = 0
+        while queue or any(r is not None for r in self.slot_req):
+            self._admit(queue)
+            if any(m == "prefill" for m in self.mode):
+                tc = time.perf_counter()
+                prefill_tokens += self._run_chunk_step()
+                prefill_s += time.perf_counter() - tc
+                chunk_steps += 1
+            elif any(m == "decode" for m in self.mode):
+                tc = time.perf_counter()
+                self._run_decode_span()
+                decode_s += time.perf_counter() - tc
+                decode_steps += self.span
+                spans += 1
+            served_tokens += self._harvest()
+        dt = time.perf_counter() - t0
+        compiles = self.compile_counts()
+        return {
+            "requests": float(len(requests)),
+            "tokens": float(served_tokens),
+            "seconds": dt,
+            "tokens_per_s": served_tokens / dt if dt > 0 else 0.0,
+            "prefill_seconds": prefill_s,
+            "decode_seconds": decode_s,
+            "prefill_tokens": float(prefill_tokens),
+            "decode_tokens": float(sum(len(r.output) for r in requests)),
+            "decode_steps": float(decode_steps),
+            "chunk_steps": float(chunk_steps),
+            "decode_spans": float(spans),
+            "compiled_programs": float(sum(max(v, 0)
+                                           for v in compiles.values())),
+        }
+
+
+# ----------------------------------------------------------------------
+# Baseline slot engine (the original implementation, kept for A/B)
+# ----------------------------------------------------------------------
+
+class SlotServer:
+    """Slot-based continuous-batching decode server — seed baseline.
+
+    Prefill steps one token at a time through `decode_step` and jit-
+    recompiles per distinct prompt length; the decode loop syncs
+    argmax/slot bookkeeping to the host every step.  Kept as the
+    reference implementation and benchmark baseline for ChunkedServer
+    (identical greedy outputs, measured speedup), with two correctness
+    fixes over the seed: `pos0` is a real prefill argument (see
+    `_prefill_impl`) and the first emitted token is stop-checked so
+    max_new is honored even at 1.
+    """
 
     def __init__(self, cfg: ModelConfig, params: Params, *,
                  batch_slots: int = 8, max_len: int = 512):
@@ -69,9 +339,18 @@ class Server:
                                     static_argnames=("in_len",))
 
     # -- admission -------------------------------------------------------
-    def _prefill_impl(self, params, cache, prompt, slot_onehot, in_len):
+    def _prefill_impl(self, params, cache, prompt, slot_onehot, pos0,
+                      in_len):
         """Prefill one prompt into one slot by stepping tokens (simple,
-        shape-stable; production would run a batched prefill kernel)."""
+        shape-stable; ChunkedServer runs the batched chunk path).
+
+        `pos0` (the per-slot positions at admission) must be a real
+        argument: the seed version closed over `self.pos`, which jit
+        froze as a constant per in_len — every later admission with an
+        already-seen prompt length replayed the stale positions and
+        garbage-wrote position 0 of the other slots' caches, so outputs
+        depended on what else was in flight.
+        """
         def body(carry, tok):
             cache, pos = carry
             token_b = jnp.where(slot_onehot > 0, tok, 0)
@@ -80,18 +359,27 @@ class Server:
             return (cache, pos + slot_onehot), logits
 
         (cache, _), logits = jax.lax.scan(
-            body, (cache, self.pos), prompt[:in_len])
+            body, (cache, pos0), prompt[:in_len])
         return cache, logits[-1]
 
     def admit(self, req: Request, slot: int) -> jax.Array:
+        if len(req.prompt) > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} "
+                f"exceeds max_len {self.max_len}")
         onehot = jnp.zeros((self.B,), jnp.int32).at[slot].set(1)
         self.pos = self.pos.at[slot].set(0)
         self.cache, last_logits = self._prefill_one(
             self.params, self.cache, jnp.asarray(req.prompt), onehot,
-            in_len=len(req.prompt))
+            self.pos, in_len=len(req.prompt))
         self.pos = self.pos.at[slot].set(len(req.prompt))
         self.slot_req[slot] = req
         return last_logits[slot]
+
+    def compile_counts(self) -> Dict[str, int]:
+        """One decode program + one prefill program per distinct length."""
+        return {"decode_step": api.compile_count(self._decode),
+                "prefill_one": api.compile_count(self._prefill_one)}
 
     # -- main loop ---------------------------------------------------------
     def serve(self, requests: List[Request]) -> Dict[str, float]:
@@ -99,18 +387,27 @@ class Server:
         next_tok = jnp.zeros((self.B,), jnp.int32)
         t0 = time.perf_counter()
         served_tokens = 0
+        prefill_s = decode_s = 0.0
         while queue or any(r is not None for r in self.slot_req):
             # refill free slots
             for s in range(self.B):
                 if self.slot_req[s] is None and queue:
                     req = queue.pop(0)
+                    tc = time.perf_counter()
                     logits = self.admit(req, s)
                     tok = int(jnp.argmax(logits))
+                    prefill_s += time.perf_counter() - tc
                     req.output.append(tok)
                     next_tok = next_tok.at[s].set(tok)
+                    if (len(req.output) >= req.max_new
+                            or int(self.pos[s]) >= self.max_len - 1):
+                        req.done = True
+                        served_tokens += len(req.prompt) + len(req.output)
+                        self.slot_req[s] = None
             if not any(r is not None for r in self.slot_req):
                 break
             # one lockstep decode step for all active slots
+            tc = time.perf_counter()
             logits, self.cache = self._decode(
                 self.params, self.cache, next_tok, self.pos)
             active = jnp.asarray(
@@ -118,6 +415,7 @@ class Server:
                 jnp.int32)
             self.pos = self.pos + active
             toks = np.asarray(jnp.argmax(logits, axis=-1))
+            decode_s += time.perf_counter() - tc
             for s, req in enumerate(self.slot_req):
                 if req is None:
                     continue
@@ -134,4 +432,10 @@ class Server:
             "tokens": float(served_tokens),
             "seconds": dt,
             "tokens_per_s": served_tokens / dt if dt > 0 else 0.0,
+            "prefill_seconds": prefill_s,
+            "decode_seconds": decode_s,
         }
+
+
+# Default engine: the chunked-prefill scheduler.
+Server = ChunkedServer

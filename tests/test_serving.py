@@ -1,0 +1,153 @@
+"""Chunked-prefill serving runtime: chunk math, output parity with the
+slot baseline, O(1) compilation, and scheduler behavior."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import api, transformer
+from repro.runtime.server import (ChunkedServer, Server, SlotServer,
+                                  Request, clone_requests,
+                                  sharegpt_like_requests)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("yi-6b")
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_default_server_is_chunked():
+    assert Server is ChunkedServer
+
+
+def test_chunk_step_matches_decode_path(setup):
+    """Chunked prefill must be bit-identical to the token-at-a-time
+    decode path (same bf16 activations, same cache contents)."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    B, L, C = 2, 13, 4
+    prompts = rng.integers(0, cfg.vocab_size, (B, L)).astype(np.int32)
+
+    ref_cache = api.init_cache(cfg, B, 32)
+    pos = jnp.zeros((B,), jnp.int32)
+    for t in range(L):
+        ref_logits, ref_cache = transformer.decode_step(
+            cfg, params, ref_cache, jnp.asarray(prompts[:, t]), pos)
+        pos = pos + 1
+
+    cache = api.init_cache(cfg, B, 32 + C)
+    pos = jnp.zeros((B,), jnp.int32)
+    off = 0
+    while off < L:
+        n = min(C, L - off)
+        chunk = np.zeros((B, C), np.int32)
+        chunk[:, :n] = prompts[:, off:off + n]
+        logits, cache = api.chunk_step(
+            cfg, params, cache, jnp.asarray(chunk), pos,
+            jnp.full((B,), n, jnp.int32))
+        pos = pos + n
+        off += n
+
+    np.testing.assert_array_equal(np.asarray(logits),
+                                  np.asarray(ref_logits))
+    T = ref_cache["k"].shape[2]
+    np.testing.assert_array_equal(
+        np.asarray(cache["k"][:, :, :L], jnp.float32),
+        np.asarray(ref_cache["k"][:, :, :L], jnp.float32))
+
+
+def test_chunked_matches_slot_server_outputs(setup):
+    """Greedy token parity on a fixed ShareGPT-like request set."""
+    cfg, params = setup
+    reqs = sharegpt_like_requests(6, cfg.vocab_size, max_input=16,
+                                  max_output=8, seed=3)
+    a, b = clone_requests(reqs), clone_requests(reqs)
+    SlotServer(cfg, params, batch_slots=3, max_len=64).serve(a)
+    ChunkedServer(cfg, params, batch_slots=3, max_len=64,
+                  chunk=8, span=4).serve(b)
+    assert all(r.done for r in a) and all(r.done for r in b)
+    for ra, rb in zip(a, b):
+        assert ra.output == rb.output, (ra.rid, ra.output, rb.output)
+
+
+def test_compile_count_independent_of_prompt_lengths(setup):
+    """8 prompts of 8 distinct lengths -> a bounded number of compiled
+    programs; a second batch with 8 MORE distinct lengths compiles
+    nothing new.  (The slot baseline compiles one prefill program per
+    distinct length.)"""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+
+    def batch(lengths, rid0):
+        return [Request(rid=rid0 + i,
+                        prompt=rng.integers(0, cfg.vocab_size, n
+                                            ).astype(np.int32),
+                        max_new=4)
+                for i, n in enumerate(lengths)]
+
+    srv = ChunkedServer(cfg, params, batch_slots=4, max_len=64,
+                        chunk=8, span=4)
+    srv.serve(batch(range(3, 11), 0))            # 8 distinct lengths
+    counts = srv.compile_counts()
+    assert all(v >= 0 for v in counts.values()), counts
+    assert sum(counts.values()) <= 3, counts
+
+    srv.serve(batch(range(11, 19), 100))         # 8 new distinct lengths
+    assert srv.compile_counts() == counts
+
+
+def test_chunked_server_respects_limits(setup):
+    cfg, params = setup
+    srv = ChunkedServer(cfg, params, batch_slots=3, max_len=64,
+                        chunk=8, span=4)
+    reqs = sharegpt_like_requests(5, cfg.vocab_size, max_input=16,
+                                  max_output=8, seed=2)
+    stats = srv.serve(reqs)
+    assert all(r.done for r in reqs)
+    assert stats["requests"] == 5
+    assert stats["tokens_per_s"] > 0
+    assert stats["prefill_tokens"] == sum(len(r.prompt) for r in reqs)
+    assert stats["decode_tokens"] == sum(len(r.output) for r in reqs)
+    for r in reqs:
+        assert 1 <= len(r.output) <= r.max_new
+        assert all(0 <= t < cfg.vocab_size for t in r.output)
+
+
+def test_max_new_one_and_oversized_prompt(setup):
+    """max_new=1 yields exactly one token (both engines, in lockstep);
+    prompts longer than max_len are rejected loudly instead of
+    clamp-corrupting the cache tail."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, 5).astype(np.int32), max_new=1)]
+    a, b = clone_requests(reqs), clone_requests(reqs)
+    SlotServer(cfg, params, batch_slots=2, max_len=32).serve(a)
+    ChunkedServer(cfg, params, batch_slots=2, max_len=32,
+                  chunk=4, span=2).serve(b)
+    assert len(a[0].output) == 1
+    assert a[0].output == b[0].output
+
+    too_long = [Request(rid=1, prompt=rng.integers(
+        0, cfg.vocab_size, 40).astype(np.int32), max_new=4)]
+    for srv in (SlotServer(cfg, params, batch_slots=2, max_len=32),
+                ChunkedServer(cfg, params, batch_slots=2, max_len=32,
+                              chunk=4, span=2)):
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            srv.serve(clone_requests(too_long))
+
+
+def test_chunk_larger_than_longest_prompt(setup):
+    """Whole-prompt-in-one-chunk degenerate case still serves."""
+    cfg, params = setup
+    srv = ChunkedServer(cfg, params, batch_slots=2, max_len=64,
+                        chunk=32, span=2)
+    reqs = sharegpt_like_requests(3, cfg.vocab_size, max_input=12,
+                                  max_output=6, seed=5)
+    srv.serve(reqs)
+    assert all(r.done for r in reqs)
+    assert all(len(r.output) >= 1 for r in reqs)
