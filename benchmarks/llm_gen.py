@@ -8,11 +8,17 @@ config, A/B-ing the two serving engines on an identical request mix:
   * slot-server   — seed baseline: token-at-a-time prefill scan, one
     compile per distinct prompt length, host sync every decode step
   * chunked-server— Sarathi-style chunked prefill + device-resident
-    decode spans, O(1) compiled programs
+    decode spans, O(1) compiled programs, contiguous per-slot KV
+  * paged-server  — the same scheduler over the paged block-pool KV
+    cache, deliberately sized under the contiguous footprint to show
+    the log-normal mix still serves (block tables share the pool
+    across slots; admission backpressures instead of failing)
 
 Also reports the prefill/decode wall-time split, the compiled-program
-counts, and greedy-output parity.  `benchmarks/run.py` snapshots the
-same numbers to BENCH_serving.json for cross-PR perf trajectories.
+counts, greedy-output parity, and the paged pool's utilization
+(peak blocks in use / pool size, KV token capacity vs the contiguous
+layout).  `benchmarks/run.py` snapshots the same numbers to
+BENCH_serving.json for cross-PR perf trajectories.
 """
 
 from __future__ import annotations
@@ -55,12 +61,22 @@ def llm_generation():
                                 max_len=96).serve(slot_reqs)
         chunk_reqs = clone_requests(base_reqs)
         srv = ChunkedServer(cfg, params, batch_slots=4, max_len=96,
-                            chunk=16, span=8)
+                            chunk=16, span=8, paged=False)
         stats = srv.serve(chunk_reqs)
+        # paged pool at half the per-slot worst case: the mix's
+        # reservations (ceil(min(in+out, max_len)/16) <= 3 blocks) fit
+        # 12 blocks = 192 KV tokens vs 4*(96+16) = 448 contiguous
+        paged_reqs = clone_requests(base_reqs)
+        paged_srv = ChunkedServer(cfg, params, batch_slots=4, max_len=96,
+                                  chunk=16, span=8, paged=True,
+                                  block_size=16, num_blocks=12)
+        paged_stats = paged_srv.serve(paged_reqs)
         speedup = (stats["tokens_per_s"] / slot_stats["tokens_per_s"]
                    if slot_stats["tokens_per_s"] > 0 else 0.0)
         parity = float(all(a.output == b.output
                            for a, b in zip(slot_reqs, chunk_reqs)))
+        paged_parity = float(all(a.output == b.output
+                                 for a, b in zip(chunk_reqs, paged_reqs)))
         busy = stats["prefill_seconds"] + stats["decode_seconds"]
         prefill_frac = stats["prefill_seconds"] / busy if busy else 0.0
         rows.append(Timing(
@@ -71,6 +87,10 @@ def llm_generation():
             f"measured(cpu)/chunked-server/{dtype_name}", 0.0, 0, 1,
             derived=stats["tokens_per_s"], derived_name="tokens_per_s"))
         rows.append(Timing(
+            f"measured(cpu)/paged-server/{dtype_name}", 0.0, 0, 1,
+            derived=paged_stats["tokens_per_s"],
+            derived_name="tokens_per_s"))
+        rows.append(Timing(
             f"measured(cpu)/chunked-vs-slot-speedup/{dtype_name}",
             0.0, 0, 1, derived=speedup, derived_name="x"))
         rows.append(Timing(
@@ -79,16 +99,41 @@ def llm_generation():
         rows.append(Timing(
             f"measured(cpu)/greedy-output-parity/{dtype_name}",
             0.0, 0, 1, derived=parity, derived_name="bool"))
+        rows.append(Timing(
+            f"measured(cpu)/paged-output-parity/{dtype_name}",
+            0.0, 0, 1, derived=paged_parity, derived_name="bool"))
+        rows.append(Timing(
+            f"measured(cpu)/paged-pool-utilization/{dtype_name}",
+            0.0, 0, 1, derived=paged_stats["pool_utilization"],
+            derived_name="frac"))
+        rows.append(Timing(
+            f"measured(cpu)/paged-kv-footprint-frac/{dtype_name}",
+            0.0, 0, 1,
+            derived=(paged_stats["kv_tokens_capacity"]
+                     / paged_stats["kv_tokens_contiguous"]),
+            derived_name="frac"))
         SERVING_RESULTS[dtype_name] = {
             "slot_tokens_per_s": slot_stats["tokens_per_s"],
             "chunked_tokens_per_s": stats["tokens_per_s"],
+            "paged_tokens_per_s": paged_stats["tokens_per_s"],
             "speedup": speedup,
             "prefill_seconds": stats["prefill_seconds"],
             "decode_seconds": stats["decode_seconds"],
             "prefill_tokens": stats["prefill_tokens"],
             "decode_tokens": stats["decode_tokens"],
             "compile_counts": srv.compile_counts(),
+            "paged_compile_counts": paged_srv.compile_counts(),
             "outputs_identical": bool(parity),
+            "paged_outputs_identical": bool(paged_parity),
+            "paged_pool": {
+                "pool_blocks": paged_stats["pool_blocks"],
+                "block_size": paged_stats["block_size"],
+                "peak_blocks_in_use": paged_stats["peak_blocks_in_use"],
+                "pool_utilization": paged_stats["pool_utilization"],
+                "kv_tokens_capacity": paged_stats["kv_tokens_capacity"],
+                "kv_tokens_contiguous": paged_stats["kv_tokens_contiguous"],
+                "admission_stalls": paged_stats["admission_stalls"],
+            },
         }
     # paper reference points (H800, llama-2-7B)
     for name, tps in (("paper/H800/llama2-7B/fp32", 568.91),

@@ -33,6 +33,14 @@ def main() -> None:
     ap.add_argument("--span", type=int, default=8,
                     help="device-resident decode steps per dispatch "
                          "(chunked engine)")
+    ap.add_argument("--contiguous", action="store_true",
+                    help="use the contiguous per-slot KV layout instead "
+                         "of the paged block pool (chunked engine)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV tokens per paged-cache block")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="paged-cache pool size in blocks (default: "
+                         "slots * ceil(max_len / block_size))")
     ap.add_argument("--max-input", type=int, default=32)
     ap.add_argument("--max-output", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
@@ -49,7 +57,9 @@ def main() -> None:
     if args.engine == "chunked":
         srv = ChunkedServer(cfg, params, batch_slots=args.slots,
                             max_len=max_len, chunk=args.chunk,
-                            span=args.span)
+                            span=args.span, paged=not args.contiguous,
+                            block_size=args.block_size,
+                            num_blocks=args.pool_blocks)
     else:
         srv = SlotServer(cfg, params, batch_slots=args.slots,
                          max_len=max_len)
@@ -66,6 +76,14 @@ def main() -> None:
     print(f"  prefill={stats['prefill_seconds']:.2f}s "
           f"decode={stats['decode_seconds']:.2f}s "
           f"compiled_programs={sum(max(v, 0) for v in srv.compile_counts().values())}")
+    if "pool_blocks" in stats:
+        print(f"  paged-kv: {int(stats['peak_blocks_in_use'])}/"
+              f"{int(stats['pool_blocks'])} blocks peak "
+              f"(x{int(stats['block_size'])} tokens, "
+              f"utilization={stats['pool_utilization']:.2f}, "
+              f"stalls={int(stats['admission_stalls'])}, "
+              f"capacity {int(stats['kv_tokens_capacity'])} vs "
+              f"{int(stats['kv_tokens_contiguous'])} contiguous tokens)")
 
 
 if __name__ == "__main__":

@@ -66,9 +66,17 @@ def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16) -> Params:
+               dtype=jnp.bfloat16, *, paged: bool = False,
+               block_size: int = 16,
+               num_blocks: Optional[int] = None) -> Params:
     if cfg.family in _TRANSFORMER_FAMILIES:
-        return transformer.init_cache(cfg, batch, max_len, dtype)
+        return transformer.init_cache(cfg, batch, max_len, dtype,
+                                      paged=paged, block_size=block_size,
+                                      num_blocks=num_blocks)
+    if paged:
+        raise NotImplementedError(
+            f"paged KV cache is transformer-only for now (family "
+            f"{cfg.family})")
     if cfg.family == "ssm":
         return ssm_lm.init_cache(cfg, batch, max_len, dtype)
     if cfg.family == "hybrid":
@@ -79,9 +87,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
-                token: jax.Array, pos: jax.Array) -> Tuple[jax.Array, Params]:
+                token: jax.Array, pos: jax.Array,
+                block_table: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Params]:
     if cfg.family in _TRANSFORMER_FAMILIES:
-        return transformer.decode_step(cfg, params, cache, token, pos)
+        return transformer.decode_step(cfg, params, cache, token, pos,
+                                       block_table)
+    if block_table is not None:
+        raise NotImplementedError(
+            f"paged KV cache is transformer-only for now (family "
+            f"{cfg.family})")
     if cfg.family == "ssm":
         return ssm_lm.decode_step(cfg, params, cache, token, pos)
     if cfg.family == "hybrid":
@@ -92,15 +107,18 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
 
 
 def chunk_step(cfg: ModelConfig, params: Params, cache: Params,
-               tokens: jax.Array, pos: jax.Array, n_tokens: jax.Array
+               tokens: jax.Array, pos: jax.Array, n_tokens: jax.Array,
+               block_table: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, Params]:
     """Chunk-write serving step: per slot, write `n_tokens[b]` of the
     C-wide `tokens[b]` into the KV cache at `pos[b]` and return logits
     at each slot's last valid row.  Fixed (B, C) shape -> one compile
-    regardless of the prompt-length distribution (runtime/server.py)."""
+    regardless of the prompt-length distribution (runtime/server.py).
+    With `block_table` the cache is the paged block pool of
+    `init_cache(..., paged=True)`."""
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.chunk_step(cfg, params, cache, tokens, pos,
-                                      n_tokens)
+                                      n_tokens, block_table)
     raise NotImplementedError(
         f"chunked prefill is transformer-only for now (family "
         f"{cfg.family}); use prefill/decode_step")

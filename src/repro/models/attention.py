@@ -488,6 +488,80 @@ def update_cache(cache_k: jax.Array, cache_v: jax.Array, k1: jax.Array,
     return cache_k, cache_v
 
 
+# ----------------------------------------------------------------------
+# paged KV cache: block pool + per-slot block tables
+# ----------------------------------------------------------------------
+#
+# Instead of one contiguous [B, T, KH, hd] region per serving slot, the
+# paged layout keeps a shared pool [num_blocks, block_size, KH, hd] per
+# layer plus a per-slot table block_table [B, max_blocks] int32 mapping
+# logical block i (virtual positions [i*bs, (i+1)*bs)) to a physical
+# pool block; -1 marks an unallocated entry.  The table is a fixed-shape
+# jit operand, so the serving programs stay O(1) compiles while slots
+# only pin the blocks their live prefix actually covers.
+
+def init_paged_kv_cache(num_blocks: int, block_size: int, kv_heads: int,
+                        head_dim: int, *, layers: int, dtype=jnp.bfloat16
+                        ) -> Dict[str, jax.Array]:
+    shape = (layers, num_blocks, block_size, kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gather_paged_cache(ck: jax.Array, cv: jax.Array,
+                       block_table: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Materialize each slot's virtual cache view through its table.
+
+    ck/cv: [num_blocks, bs, KH, hd]; block_table: [B, max_blocks].
+    Returns [B, max_blocks*bs, KH, hd].  Unallocated entries (-1) read
+    physical block 0 — garbage, but every such virtual position lies at
+    or beyond the slot's frontier, which the position masks of
+    `chunk_attention` / `decode_attention` already exclude (masked
+    scores sit at NEG_INF, so their softmax weight underflows to an
+    exact 0.0 and the outputs stay bit-identical to a contiguous cache).
+    """
+    bt = jnp.maximum(block_table, 0)
+    NB, bs, KH, hd = ck.shape
+    B, MB = bt.shape
+    kg = ck[bt].reshape(B, MB * bs, KH, hd)
+    vg = cv[bt].reshape(B, MB * bs, KH, hd)
+    return kg, vg
+
+
+def update_paged_cache(ck: jax.Array, cv: jax.Array, k1: jax.Array,
+                       v1: jax.Array, pos: jax.Array,
+                       block_table: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter a step's k/v ([B, C, KH, hd]) through the block table.
+
+    Row i of slot b lands at virtual position pos[b] + i, i.e. physical
+    row block_table[b, p // bs] * bs + p % bs of the flattened pool.
+    Writes whose virtual block is unallocated (or past the table) are
+    dropped: they are exactly the beyond-frontier padding rows the
+    contiguous path writes into its `+ chunk` headroom and overwrites
+    before they become visible — here they simply never land, so a slot
+    can only ever touch its own blocks.
+    """
+    NB, bs, KH, hd = ck.shape
+    B, C = k1.shape[:2]
+    MB = block_table.shape[1]
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:                     # lockstep decode: same frontier
+        pos = jnp.full((B,), pos, jnp.int32)
+    vpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]   # [B,C]
+    blk = vpos // bs
+    phys = jnp.take_along_axis(block_table, jnp.clip(blk, 0, MB - 1),
+                               axis=1)
+    valid = (blk < MB) & (phys >= 0)
+    flat_idx = jnp.where(valid, phys * bs + vpos % bs, NB * bs)
+    ck_flat = ck.reshape(NB * bs, KH, hd).at[flat_idx.reshape(-1)].set(
+        k1.astype(ck.dtype).reshape(B * C, KH, hd), mode="drop")
+    cv_flat = cv.reshape(NB * bs, KH, hd).at[flat_idx.reshape(-1)].set(
+        v1.astype(cv.dtype).reshape(B * C, KH, hd), mode="drop")
+    return (ck_flat.reshape(NB, bs, KH, hd),
+            cv_flat.reshape(NB, bs, KH, hd))
+
+
 def attention_flops(B: int, Sq: int, Sk: int, H: int, hd: int,
                     causal: bool) -> float:
     """Useful FLOPs of the score+value matmuls (for MODEL_FLOPS)."""

@@ -174,9 +174,22 @@ def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
 # serving: prefill + single-token decode over a KV cache
 # ----------------------------------------------------------------------
 
-def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
+               paged: bool = False, block_size: int = 16,
+               num_blocks: Optional[int] = None) -> Params:
+    """Contiguous cache [L, B, T, KH, hd] or, with ``paged=True``, a
+    shared block pool [L, num_blocks, block_size, KH, hd] addressed
+    through a per-slot block table (see attention.gather_paged_cache).
+    The paged default pool matches the contiguous capacity
+    (batch * ceil(max_len / block_size) blocks); servers pass a smaller
+    pool to actually share memory across slots."""
     L = cfg.num_layers
     KH, hd = cfg.num_kv_heads, cfg.head_dim
+    if paged:
+        if num_blocks is None:
+            num_blocks = batch * -(-max_len // block_size)
+        return attn.init_paged_kv_cache(num_blocks, block_size, KH, hd,
+                                        layers=L, dtype=dtype)
     return {
         "k": jnp.zeros((L, batch, max_len, KH, hd), dtype),
         "v": jnp.zeros((L, batch, max_len, KH, hd), dtype),
@@ -184,11 +197,16 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
 
 
 def decode_step(cfg, params, cache: Params, token: jax.Array,
-                pos: jax.Array) -> Tuple[jax.Array, Params]:
+                pos: jax.Array, block_table: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Params]:
     """One decode step. token [B], pos scalar int32 (current length).
 
     Scans layers together with their cache slices; each layer attends to
-    cache[:pos+1] after inserting its new k/v at `pos`.
+    cache[:pos+1] after inserting its new k/v at `pos`.  With
+    ``block_table`` the cache is a paged block pool and the read/write
+    paths go through the table (attention.update_paged_cache /
+    gather_paged_cache); outputs are bit-identical to the contiguous
+    layout.
     """
     B = token.shape[0]
     x = params["embed"].astype(jnp.bfloat16)[token][:, None, :]  # [B,1,d]
@@ -203,8 +221,14 @@ def decode_step(cfg, params, cache: Params, token: jax.Array,
         q, k1, v1 = attn.qkv_project(cfg, lp["attn"], h)
         q = apply_rope(q, positions, cfg.rope_theta)
         k1 = apply_rope(k1, positions, cfg.rope_theta)
-        ck, cv = attn.update_cache(ck, cv, k1, v1, pos)
-        o = attn.decode_attention(q, ck, cv, pos + 1)
+        if block_table is None:
+            ck, cv = attn.update_cache(ck, cv, k1, v1, pos)
+            kg, vg = ck, cv
+        else:
+            ck, cv = attn.update_paged_cache(ck, cv, k1, v1, pos,
+                                             block_table)
+            kg, vg = attn.gather_paged_cache(ck, cv, block_table)
+        o = attn.decode_attention(q, kg, vg, pos + 1)
         x = x + attn.out_project(lp["attn"], o)
         h = apply_norm(cfg, x, lp["ln2"])
         if cfg.family == "moe":
@@ -221,7 +245,8 @@ def decode_step(cfg, params, cache: Params, token: jax.Array,
 
 
 def chunk_step(cfg, params, cache: Params, tokens: jax.Array,
-               pos: jax.Array, n_tokens: jax.Array
+               pos: jax.Array, n_tokens: jax.Array,
+               block_table: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, Params]:
     """One chunked-prefill/decode step for a batch of server slots.
 
@@ -234,6 +259,11 @@ def chunk_step(cfg, params, cache: Params, tokens: jax.Array,
     queries, and the next step's write starts at the new frontier so
     they are overwritten before becoming visible).
     n_tokens [B] int32 in [0, C].
+    block_table [B, max_blocks] int32 (optional) — cache is a paged
+    block pool; reads/writes gather/scatter through the table (padding
+    rows whose virtual block is unallocated are dropped instead of
+    overwritten later).  The table has a fixed shape, so the paged
+    program compiles once too.
 
     Returns (logits [B, vocab] at each slot's last valid row, cache).
     Shapes are fixed by (B, C) only, so a server compiles this once no
@@ -250,8 +280,14 @@ def chunk_step(cfg, params, cache: Params, tokens: jax.Array,
         q, k, v = attn.qkv_project(cfg, lp["attn"], h)
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-        ck, cv = attn.update_cache(ck, cv, k, v, pos)
-        o = attn.chunk_attention(q, ck, cv, positions)
+        if block_table is None:
+            ck, cv = attn.update_cache(ck, cv, k, v, pos)
+            kg, vg = ck, cv
+        else:
+            ck, cv = attn.update_paged_cache(ck, cv, k, v, pos,
+                                             block_table)
+            kg, vg = attn.gather_paged_cache(ck, cv, block_table)
+        o = attn.chunk_attention(q, kg, vg, positions)
         x = x + attn.out_project(lp["attn"], o)
         h = apply_norm(cfg, x, lp["ln2"])
         if cfg.family == "moe":

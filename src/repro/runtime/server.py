@@ -15,6 +15,23 @@ Because every compiled program has a shape fixed by (slots, chunk,
 span), the engine compiles O(1) programs no matter how prompt lengths
 are distributed (probe: ``compile_counts()``).
 
+KV memory is **paged** by default (vLLM-style): instead of reserving a
+contiguous ``max_len + chunk`` region per slot up front, the cache is a
+shared pool of fixed-size blocks ([num_blocks, block_size, KH, hd] per
+layer) addressed through a per-slot block table — a fixed-shape
+[slots, max_blocks] int32 jit operand, so the compiled programs are
+unchanged in number.  A host-side allocator hands blocks to a slot as
+its prefill/decode frontier advances and returns them at harvest;
+admission reserves each request's worst case
+(ceil(min(in_len + max_new, max_len) / block_size) blocks) and, when
+the pool cannot cover it, leaves the request queued (backpressure)
+instead of failing — under the log-normal ShareGPT mix this serves the
+same traffic in a fraction of the contiguous footprint
+(``BENCH_serving.json`` pool metrics).  ``paged=False`` restores the
+contiguous layout for A/B; greedy outputs are bit-identical either way
+(masked positions carry exactly-zero softmax weight, so the virtual
+view through the table matches the contiguous cache).
+
 ``SlotServer`` — the original engine, kept as the measured baseline:
 prefill feeds one token per ``decode_step`` through a scan and
 recompiles per distinct prompt length; the decode loop syncs to the
@@ -22,7 +39,10 @@ host every step.  `benchmarks/llm_gen.py` reports both.
 
 Both engines emit identical greedy token sequences: the chunked path's
 per-slot math (bf16 activations, fp32 softmax over the masked cache)
-matches the token-at-a-time decode path bit for bit.
+matches the token-at-a-time decode path bit for bit.  Requests whose
+``in_len + max_new`` cannot fit below the ``max_len`` position cap are
+flagged ``truncated`` at admission (both engines) instead of silently
+coming back short.
 """
 
 from __future__ import annotations
@@ -49,6 +69,10 @@ class Request:
     max_new: int
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # set at admission when in_len + max_new overruns the max_len
+    # position cap: generation will stop at max_len - in_len tokens
+    # instead of max_new (previously a silent short harvest)
+    truncated: bool = False
 
 
 def sharegpt_like_requests(n: int, vocab: int, *, max_input: int = 128,
@@ -88,12 +112,23 @@ class ChunkedServer:
     The host mirrors position/emission bookkeeping in numpy — greedy
     decoding with length-only stopping is fully deterministic, so the
     mirror never needs to read device state; tokens cross to the host
-    only when a finished request is harvested.
+    only when a finished request is harvested.  All mirror arrays are
+    int32 (matching the jit operands) so operand dtypes never drift
+    between calls.
+
+    With ``paged=True`` (default) the KV cache is a shared block pool
+    plus per-slot block tables; `_ensure_blocks` assigns physical
+    blocks as a slot's frontier advances and `_harvest` returns them,
+    so a slot only ever pins ceil(live_prefix / block_size) blocks.
+    ``_admit`` reserves the request's worst case against the pool and
+    backpressures (leaves the queue head waiting) when it cannot,
+    instead of capping concurrency at a fixed per-slot max_len region.
     """
 
     def __init__(self, cfg: ModelConfig, params: Params, *,
                  batch_slots: int = 8, max_len: int = 512,
-                 chunk: int = 16, span: int = 8):
+                 chunk: int = 16, span: int = 8, paged: bool = True,
+                 block_size: int = 16, num_blocks: Optional[int] = None):
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
         self.params = params
@@ -101,9 +136,28 @@ class ChunkedServer:
         self.max_len = max_len
         self.chunk = chunk
         self.span = span
-        # + chunk headroom: chunk writes start at the valid frontier and
-        # must never clamp (see attention.update_cache)
-        self.cache = api.init_cache(cfg, batch_slots, max_len + chunk)
+        self.paged = paged
+        if paged:
+            self.block_size = block_size
+            # virtual blocks per slot; real writes never pass max_len
+            self.max_blocks = -(-max_len // block_size)
+            self.num_blocks = (batch_slots * self.max_blocks
+                               if num_blocks is None else num_blocks)
+            self.cache = api.init_cache(
+                cfg, batch_slots, max_len, paged=True,
+                block_size=block_size, num_blocks=self.num_blocks)
+            self.block_table = np.full((batch_slots, self.max_blocks),
+                                       -1, np.int32)
+            self._free_blocks = list(range(self.num_blocks))
+            self._slot_blocks: List[List[int]] = [[] for _ in range(batch_slots)]
+            self._reserved = np.zeros(batch_slots, np.int32)
+            self._reserve_free = self.num_blocks
+            self.peak_blocks = 0
+            self.admission_stalls = 0
+        else:
+            # + chunk headroom: chunk writes start at the valid frontier
+            # and must never clamp (see attention.update_cache)
+            self.cache = api.init_cache(cfg, batch_slots, max_len + chunk)
         self.cur_tok = jnp.zeros((batch_slots,), jnp.int32)
         self.out_buf = jnp.zeros((batch_slots, max_len), jnp.int32)
         # host-owned mirror (deterministic; never read back from device)
@@ -111,19 +165,27 @@ class ChunkedServer:
         self.out_len = np.zeros(batch_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.mode = ["idle"] * batch_slots    # idle | prefill | decode | done
-        self.prompt_off = np.zeros(batch_slots, np.int64)
+        self.prompt_off = np.zeros(batch_slots, np.int32)
         self._chunk_fn = jax.jit(self._chunk_impl)
         self._span_fn = jax.jit(self._span_impl)
 
+    def _device_block_table(self) -> np.ndarray:
+        """Snapshot of the block table as a jit operand (fixed shape;
+        a dummy for the contiguous layout so signatures don't vary)."""
+        if self.paged:
+            return self.block_table.copy()
+        return np.zeros((self.B, 1), np.int32)
+
     # -- jitted work units ------------------------------------------------
     def _chunk_impl(self, params, cache, cur_tok, out_buf, tokens_host,
-                    pos, n_tokens, is_decode, emit, out_len):
+                    pos, n_tokens, is_decode, emit, out_len, block_table):
         B, C = tokens_host.shape
         col0 = jnp.arange(C, dtype=jnp.int32) == 0
         tokens = jnp.where(is_decode[:, None] & col0[None, :],
                            cur_tok[:, None], tokens_host)
         logits, cache = transformer.chunk_step(
-            self.cfg, params, cache, tokens, pos, n_tokens)
+            self.cfg, params, cache, tokens, pos, n_tokens,
+            block_table if self.paged else None)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         cur_tok = jnp.where(emit, nxt, cur_tok)
         row = jnp.arange(B)
@@ -133,14 +195,15 @@ class ChunkedServer:
         return cache, cur_tok, out_buf
 
     def _span_impl(self, params, cache, cur_tok, out_buf, pos, out_len,
-                   active, max_new):
+                   active, max_new, block_table):
         row = jnp.arange(self.B)
         cap = self.max_len - 1
+        bt = block_table if self.paged else None
 
         def step(carry, _):
             cache, tok, pos, out_buf, out_len, active = carry
             logits, cache = transformer.decode_step(
-                self.cfg, params, cache, tok, pos)
+                self.cfg, params, cache, tok, pos, bt)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             idx = jnp.clip(out_len, 0, out_buf.shape[1] - 1)
             out_buf = out_buf.at[row, idx].set(
@@ -162,17 +225,65 @@ class ChunkedServer:
         return {"chunk_step": api.compile_count(self._chunk_fn),
                 "decode_span": api.compile_count(self._span_fn)}
 
+    # -- host-side block allocator (paged) --------------------------------
+    def _blocks_needed(self, req: Request) -> int:
+        """Worst-case block demand: the frontier never passes
+        min(in_len + max_new, max_len)."""
+        span_len = min(len(req.prompt) + req.max_new, self.max_len)
+        return -(-span_len // self.block_size)
+
+    def _ensure_blocks(self, s: int, upto: int) -> None:
+        """Assign physical blocks so slot s covers virtual [0, upto)."""
+        need = -(-upto // self.block_size)
+        assert need <= self._reserved[s], \
+            f"slot {s}: demand {need} blocks exceeds reservation"
+        owned = self._slot_blocks[s]
+        while len(owned) < need:
+            assert self._free_blocks, "block pool over-committed"
+            b = self._free_blocks.pop()
+            self.block_table[s, len(owned)] = b
+            owned.append(b)
+        in_use = self.num_blocks - len(self._free_blocks)
+        self.peak_blocks = max(self.peak_blocks, in_use)
+
+    def _free_slot_blocks(self, s: int) -> None:
+        for b in self._slot_blocks[s]:
+            self._free_blocks.append(b)
+        self._slot_blocks[s] = []
+        self.block_table[s, :] = -1
+        self._reserve_free += int(self._reserved[s])
+        self._reserved[s] = 0
+
     # -- host-side scheduling --------------------------------------------
     def _admit(self, queue: List[Request]) -> None:
         for s in range(self.B):
             if self.slot_req[s] is None and queue:
-                req = queue.pop(0)
+                req = queue[0]
                 if len(req.prompt) > self.max_len:
                     # out-of-range cache writes would clamp and silently
                     # corrupt the slot's tail (see attention.update_cache)
+                    queue.pop(0)
                     raise ValueError(
                         f"request {req.rid}: prompt length "
                         f"{len(req.prompt)} exceeds max_len {self.max_len}")
+                if self.paged:
+                    needed = self._blocks_needed(req)
+                    if needed > self._reserve_free:
+                        if not any(r is not None for r in self.slot_req):
+                            # nothing in flight to free up blocks
+                            raise ValueError(
+                                f"request {req.rid}: needs {needed} KV "
+                                f"blocks but the pool has "
+                                f"{self.num_blocks}; grow num_blocks")
+                        # backpressure: wait for a harvest to free blocks
+                        self.admission_stalls += 1
+                        break
+                    self._reserved[s] = needed
+                    self._reserve_free -= needed
+                queue.pop(0)
+                # the pos cap stops generation at max_len - in_len tokens;
+                # flag the shortfall instead of harvesting silently short
+                req.truncated = len(req.prompt) + req.max_new > self.max_len
                 self.slot_req[s] = req
                 self.mode[s] = "prefill"
                 self.prompt_off[s] = 0
@@ -204,14 +315,18 @@ class ChunkedServer:
                 tokens_host[s, :n] = req.prompt[off:off + n]
                 n_tokens[s] = n
                 emit[s] = off + n == len(req.prompt)
+                if self.paged:
+                    self._ensure_blocks(s, int(self.pos[s]) + n)
             elif self.mode[s] == "decode":
                 n_tokens[s] = 1
                 is_decode[s] = True
                 emit[s] = True
+                if self.paged:
+                    self._ensure_blocks(s, int(self.pos[s]) + 1)
         self.cache, self.cur_tok, self.out_buf = self._chunk_fn(
             self.params, self.cache, self.cur_tok, self.out_buf,
             tokens_host, self.pos.copy(), n_tokens, is_decode, emit,
-            self.out_len.copy())
+            self.out_len.copy(), self._device_block_table())
         self.cur_tok.block_until_ready()
         prompt_tokens = 0
         for s, req in enumerate(self.slot_req):
@@ -237,33 +352,51 @@ class ChunkedServer:
         max_new = np.array(
             [r.max_new if r is not None else 0 for r in self.slot_req],
             np.int32)
+        # deterministic mirror of the on-device span, computed up front
+        # so the paged allocator knows each slot's final frontier before
+        # the device writes to it
+        cap = self.max_len - 1
+        sim_pos = self.pos.copy()
+        sim_out = self.out_len.copy()
+        sim_act = active.copy()
+        for _ in range(self.span):
+            for s in np.flatnonzero(sim_act):
+                sim_out[s] += 1
+                sim_pos[s] += 1
+                if (sim_out[s] >= max_new[s] or sim_pos[s] >= cap):
+                    sim_act[s] = False
+        if self.paged:
+            for s in np.flatnonzero(active):
+                self._ensure_blocks(s, int(sim_pos[s]))
         self.cache, self.cur_tok, self.out_buf = self._span_fn(
             self.params, self.cache, self.cur_tok, self.out_buf,
-            self.pos.copy(), self.out_len.copy(), active, max_new)
+            self.pos.copy(), self.out_len.copy(), active, max_new,
+            self._device_block_table())
         self.cur_tok.block_until_ready()
-        # deterministic mirror of the on-device span
-        cap = self.max_len - 1
-        for _ in range(self.span):
-            for s in np.flatnonzero(active):
-                self.out_len[s] += 1
-                self.pos[s] += 1
-                if (self.out_len[s] >= max_new[s] or self.pos[s] >= cap):
-                    active[s] = False
-                    self.mode[s] = "done"
+        self.pos = sim_pos
+        self.out_len = sim_out
+        for s in np.flatnonzero(active & ~sim_act):
+            self.mode[s] = "done"
 
     def _harvest(self) -> int:
         done_slots = [s for s in range(self.B) if self.mode[s] == "done"]
         if not done_slots:
             return 0
-        buf = np.asarray(self.out_buf)     # only host transfer of tokens
+        # gather only the finished slots' rows on device before the host
+        # copy — the old path shipped the whole [B, max_len] buffer over
+        # on every harvest
+        rows = np.asarray(jnp.take(
+            self.out_buf, jnp.asarray(done_slots, jnp.int32), axis=0))
         served = 0
-        for s in done_slots:
+        for i, s in enumerate(done_slots):
             req = self.slot_req[s]
-            req.output = [int(t) for t in buf[s, : int(self.out_len[s])]]
+            req.output = [int(t) for t in rows[i, : int(self.out_len[s])]]
             req.done = True
             served += len(req.prompt) + len(req.output)
             self.slot_req[s] = None
             self.mode[s] = "idle"
+            if self.paged:
+                self._free_slot_blocks(s)
         return served
 
     # -- main loop ---------------------------------------------------------
@@ -273,6 +406,10 @@ class ChunkedServer:
         served_tokens = 0
         prefill_s = decode_s = 0.0
         prefill_tokens = decode_steps = chunk_steps = spans = 0
+        if self.paged:
+            # pool metrics are per serve() run, not per server lifetime
+            self.peak_blocks = self.num_blocks - len(self._free_blocks)
+            self.admission_stalls = 0
         while queue or any(r is not None for r in self.slot_req):
             self._admit(queue)
             if any(m == "prefill" for m in self.mode):
@@ -289,7 +426,7 @@ class ChunkedServer:
             served_tokens += self._harvest()
         dt = time.perf_counter() - t0
         compiles = self.compile_counts()
-        return {
+        stats = {
             "requests": float(len(requests)),
             "tokens": float(served_tokens),
             "seconds": dt,
@@ -304,6 +441,20 @@ class ChunkedServer:
             "compiled_programs": float(sum(max(v, 0)
                                            for v in compiles.values())),
         }
+        if self.paged:
+            contiguous_tokens = self.B * (self.max_len + self.chunk)
+            stats.update({
+                "pool_blocks": float(self.num_blocks),
+                "block_size": float(self.block_size),
+                "peak_blocks_in_use": float(self.peak_blocks),
+                "pool_utilization": (self.peak_blocks / self.num_blocks
+                                     if self.num_blocks else 0.0),
+                "kv_tokens_capacity": float(self.num_blocks
+                                            * self.block_size),
+                "kv_tokens_contiguous": float(contiguous_tokens),
+                "admission_stalls": float(self.admission_stalls),
+            })
+        return stats
 
 
 # ----------------------------------------------------------------------
@@ -367,6 +518,9 @@ class SlotServer:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.prompt)} "
                 f"exceeds max_len {self.max_len}")
+        # same truncation rule as ChunkedServer._admit: the pos cap
+        # limits generation to max_len - in_len tokens
+        req.truncated = len(req.prompt) + req.max_new > self.max_len
         onehot = jnp.zeros((self.B,), jnp.int32).at[slot].set(1)
         self.pos = self.pos.at[slot].set(0)
         self.cache, last_logits = self._prefill_one(

@@ -151,3 +151,140 @@ def test_chunk_larger_than_longest_prompt(setup):
     srv.serve(reqs)
     assert all(r.done for r in reqs)
     assert all(len(r.output) >= 1 for r in reqs)
+
+
+# ----------------------------------------------------------------------
+# paged KV cache
+# ----------------------------------------------------------------------
+
+def test_paged_matches_contiguous_outputs(setup):
+    """Paged and contiguous ChunkedServer must be greedy bit-identical
+    on the Table XII-style mix, both with O(1) compiled programs."""
+    cfg, params = setup
+    reqs = sharegpt_like_requests(8, cfg.vocab_size, max_input=16,
+                                  max_output=8, seed=11)
+    a, b = clone_requests(reqs), clone_requests(reqs)
+    contiguous = ChunkedServer(cfg, params, batch_slots=3, max_len=64,
+                               chunk=8, span=4, paged=False)
+    paged = ChunkedServer(cfg, params, batch_slots=3, max_len=64,
+                          chunk=8, span=4, paged=True, block_size=8)
+    contiguous.serve(a)
+    stats = paged.serve(b)
+    assert all(r.done for r in a) and all(r.done for r in b)
+    for ra, rb in zip(a, b):
+        assert ra.output == rb.output, (ra.rid, ra.output, rb.output)
+    for srv in (contiguous, paged):
+        counts = srv.compile_counts()
+        assert all(v >= 0 for v in counts.values()), counts
+        assert sum(counts.values()) <= 3, counts
+    # pool metrics come back with the stats and the default pool already
+    # undercuts the contiguous layout's + chunk headroom
+    assert stats["peak_blocks_in_use"] <= stats["pool_blocks"]
+    assert stats["kv_tokens_capacity"] < stats["kv_tokens_contiguous"]
+
+
+def test_paged_block_reuse_no_stale_kv(setup):
+    """Two request waves through the same pool: wave 2 decodes on
+    recycled physical blocks and must match a fresh server bit for bit
+    (any stale wave-1 KV leaking through the block table would split
+    the outputs)."""
+    cfg, params = setup
+    wave1 = sharegpt_like_requests(5, cfg.vocab_size, max_input=16,
+                                   max_output=8, seed=21)
+    wave2 = sharegpt_like_requests(5, cfg.vocab_size, max_input=16,
+                                   max_output=8, seed=22)
+    srv = ChunkedServer(cfg, params, batch_slots=2, max_len=64,
+                        chunk=8, span=4, paged=True, block_size=8)
+    srv.serve(wave1)
+    used_after_wave1 = srv.num_blocks - len(srv._free_blocks)
+    assert used_after_wave1 == 0          # harvest returned every block
+    assert (srv.block_table == -1).all()
+    reused = clone_requests(wave2)
+    srv.serve(reused)
+    fresh = clone_requests(wave2)
+    ChunkedServer(cfg, params, batch_slots=2, max_len=64,
+                  chunk=8, span=4, paged=True, block_size=8).serve(fresh)
+    for ra, rb in zip(reused, fresh):
+        assert ra.output == rb.output, (ra.rid, ra.output, rb.output)
+
+
+def test_paged_pool_backpressure(setup):
+    """A pool too small for every slot at once stalls admission until a
+    harvest frees blocks, instead of failing or corrupting state."""
+    cfg, params = setup
+    reqs = sharegpt_like_requests(6, cfg.vocab_size, max_input=16,
+                                  max_output=8, seed=13)
+    # each request reserves at most ceil(24/8)=3 blocks; 4 blocks force
+    # one-at-a-time admission even though 3 slots exist
+    srv = ChunkedServer(cfg, params, batch_slots=3, max_len=64,
+                        chunk=8, span=4, paged=True, block_size=8,
+                        num_blocks=4)
+    stats = srv.serve(clone_requests(reqs))
+    assert stats["admission_stalls"] > 0
+    assert stats["peak_blocks_in_use"] <= 4
+    # throttled admission must not change the greedy outputs
+    throttled = clone_requests(reqs)
+    srv2 = ChunkedServer(cfg, params, batch_slots=3, max_len=64,
+                         chunk=8, span=4, paged=True, block_size=8,
+                         num_blocks=4)
+    srv2.serve(throttled)
+    roomy = clone_requests(reqs)
+    ChunkedServer(cfg, params, batch_slots=3, max_len=64,
+                  chunk=8, span=4, paged=True, block_size=8).serve(roomy)
+    for ra, rb in zip(throttled, roomy):
+        assert ra.output == rb.output, (ra.rid, ra.output, rb.output)
+
+
+def test_paged_pool_too_small_raises(setup):
+    """A request that can never fit the pool raises instead of hanging."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    srv = ChunkedServer(cfg, params, batch_slots=2, max_len=64,
+                        chunk=8, span=4, paged=True, block_size=8,
+                        num_blocks=2)
+    req = Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, 30).astype(np.int32), max_new=8)
+    with pytest.raises(ValueError, match="grow num_blocks"):
+        srv.serve([req])
+
+
+def test_truncation_flagged_both_engines(setup):
+    """in_len + max_new past the pos cap is no longer a silent short
+    harvest: the request is flagged truncated at admission and capped at
+    max_len - in_len tokens (both engines, identical tokens)."""
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    in_len, max_len = 28, 32
+    prompt = rng.integers(0, cfg.vocab_size, in_len).astype(np.int32)
+    reqs = [Request(rid=0, prompt=prompt, max_new=16),
+            Request(rid=1, prompt=prompt.copy(), max_new=2)]
+    a, b = clone_requests(reqs), clone_requests(reqs)
+    SlotServer(cfg, params, batch_slots=2, max_len=max_len).serve(a)
+    ChunkedServer(cfg, params, batch_slots=2, max_len=max_len,
+                  chunk=8, span=4).serve(b)
+    for served in (a, b):
+        assert served[0].truncated
+        assert len(served[0].output) == max_len - in_len
+        assert not served[1].truncated
+        assert len(served[1].output) == 2
+    for ra, rb in zip(a, b):
+        assert ra.output == rb.output
+
+
+def test_host_mirror_dtypes_are_int32(setup):
+    """Host mirror arrays feed jit operands; any drift (the old
+    prompt_off was int64) risks a retrace or a silent upcast."""
+    cfg, params = setup
+    srv = ChunkedServer(cfg, params, batch_slots=2, max_len=32,
+                        chunk=4, span=2)
+    assert srv.pos.dtype == np.int32
+    assert srv.out_len.dtype == np.int32
+    assert srv.prompt_off.dtype == np.int32
+    assert srv.block_table.dtype == np.int32
+    reqs = sharegpt_like_requests(3, cfg.vocab_size, max_input=8,
+                                  max_output=4, seed=6)
+    srv.serve(reqs)
+    assert srv.pos.dtype == np.int32
+    assert srv.out_len.dtype == np.int32
+    assert srv.prompt_off.dtype == np.int32
+    assert srv.block_table.dtype == np.int32
