@@ -14,6 +14,15 @@ config, A/B-ing the two serving engines on an identical request mix:
     the log-normal mix still serves (block tables share the pool
     across slots; admission backpressures instead of failing)
 
+A second, shared-prefix protocol (`sysprompt_sharegpt_requests`: a few
+system-prompt templates × log-normal unique tails — the production
+pattern where millions of users hit the same few prompts) A/Bs the
+radix prefix cache over the paged pool: one cold wave populates the
+tree (intra-wave sharing only), one warm wave measures steady state,
+both against the identical mix with `prefix_cache=False`.  Reported:
+tokens/s with/without sharing, prefix-hit-rate, cached-token fraction,
+and greedy-output parity (cached must stay bit-identical).
+
 Also reports the prefill/decode wall-time split, the compiled-program
 counts, greedy-output parity, and the paged pool's utilization
 (peak blocks in use / pool size, KV token capacity vs the contiguous
@@ -34,7 +43,8 @@ from repro.core.bench import register
 from repro.core.timer import Timing
 from repro.models import api
 from repro.runtime.server import (ChunkedServer, SlotServer,
-                                  clone_requests, sharegpt_like_requests)
+                                  clone_requests, sharegpt_like_requests,
+                                  sysprompt_sharegpt_requests)
 
 # Snapshot of the last llm_generation run, keyed by param dtype;
 # benchmarks/run.py serializes it to BENCH_serving.json.
@@ -67,9 +77,13 @@ def llm_generation():
         # reservations (ceil(min(in+out, max_len)/16) <= 3 blocks) fit
         # 12 blocks = 192 KV tokens vs 4*(96+16) = 448 contiguous
         paged_reqs = clone_requests(base_reqs)
+        # prefix_cache=False keeps this row comparable with the PR-2
+        # trajectory (pure paged engine; the shared-prefix section
+        # below measures the cache separately)
         paged_srv = ChunkedServer(cfg, params, batch_slots=4, max_len=96,
                                   chunk=16, span=8, paged=True,
-                                  block_size=16, num_blocks=12)
+                                  block_size=16, num_blocks=12,
+                                  prefix_cache=False)
         paged_stats = paged_srv.serve(paged_reqs)
         speedup = (stats["tokens_per_s"] / slot_stats["tokens_per_s"]
                    if slot_stats["tokens_per_s"] > 0 else 0.0)
@@ -112,6 +126,60 @@ def llm_generation():
             derived=(paged_stats["kv_tokens_capacity"]
                      / paged_stats["kv_tokens_contiguous"]),
             derived_name="frac"))
+        # shared-prefix mix: radix prefix cache on vs off, same traffic
+        shared_reqs = sysprompt_sharegpt_requests(
+            16, cfg.vocab_size, num_templates=2, template_len=104,
+            max_input=112, max_output=6, seed=1)
+        pc_kw = dict(batch_slots=4, max_len=128, chunk=16, span=8,
+                     paged=True, block_size=16, num_blocks=64)
+        nocache_srv = ChunkedServer(cfg, params, prefix_cache=False,
+                                    **pc_kw)
+        nocache_srv.serve(clone_requests(shared_reqs))   # compile warmup
+        nocache_reqs = clone_requests(shared_reqs)
+        nocache_stats = nocache_srv.serve(nocache_reqs)
+        cached_srv = ChunkedServer(cfg, params, prefix_cache=True,
+                                   **pc_kw)
+        # compile warmup with a disjoint mix so the cold wave below
+        # still measures intra-wave sharing, not leaked tree state;
+        # served twice so the second pass hits the tree and compiles
+        # the COW program outside the timed region
+        warmup = sysprompt_sharegpt_requests(
+            4, cfg.vocab_size, num_templates=1, template_len=104,
+            max_input=112, max_output=6, seed=999)
+        cached_srv.serve(clone_requests(warmup))
+        cached_srv.serve(clone_requests(warmup))
+        cold_reqs = clone_requests(shared_reqs)
+        cold_stats = cached_srv.serve(cold_reqs)
+        warm_reqs = clone_requests(shared_reqs)
+        warm_stats = cached_srv.serve(warm_reqs)
+        prefix_parity = float(all(
+            a.output == b.output == c.output
+            for a, b, c in zip(nocache_reqs, cold_reqs, warm_reqs)))
+        prefix_speedup = (warm_stats["tokens_per_s"]
+                          / nocache_stats["tokens_per_s"]
+                          if nocache_stats["tokens_per_s"] > 0 else 0.0)
+        rows.append(Timing(
+            f"measured(cpu)/sysprompt-nocache/{dtype_name}", 0.0, 0, 1,
+            derived=nocache_stats["tokens_per_s"],
+            derived_name="tokens_per_s"))
+        rows.append(Timing(
+            f"measured(cpu)/sysprompt-prefix-cache-warm/{dtype_name}",
+            0.0, 0, 1, derived=warm_stats["tokens_per_s"],
+            derived_name="tokens_per_s"))
+        rows.append(Timing(
+            f"measured(cpu)/prefix-cache-speedup/{dtype_name}",
+            0.0, 0, 1, derived=prefix_speedup, derived_name="x"))
+        rows.append(Timing(
+            f"measured(cpu)/prefix-hit-rate/{dtype_name}",
+            0.0, 0, 1, derived=warm_stats["prefix_hit_rate"],
+            derived_name="frac"))
+        rows.append(Timing(
+            f"measured(cpu)/prefix-cached-token-frac/{dtype_name}",
+            0.0, 0, 1, derived=warm_stats["cached_token_fraction"],
+            derived_name="frac"))
+        rows.append(Timing(
+            f"measured(cpu)/prefix-output-parity/{dtype_name}",
+            0.0, 0, 1, derived=prefix_parity, derived_name="bool"))
         SERVING_RESULTS[dtype_name] = {
             "slot_tokens_per_s": slot_stats["tokens_per_s"],
             "chunked_tokens_per_s": stats["tokens_per_s"],
@@ -133,6 +201,20 @@ def llm_generation():
                 "kv_tokens_capacity": paged_stats["kv_tokens_capacity"],
                 "kv_tokens_contiguous": paged_stats["kv_tokens_contiguous"],
                 "admission_stalls": paged_stats["admission_stalls"],
+            },
+            "shared_prefix": {
+                "nocache_tokens_per_s": nocache_stats["tokens_per_s"],
+                "cold_tokens_per_s": cold_stats["tokens_per_s"],
+                "warm_tokens_per_s": warm_stats["tokens_per_s"],
+                "speedup_warm": prefix_speedup,
+                "cold_hit_rate": cold_stats["prefix_hit_rate"],
+                "warm_hit_rate": warm_stats["prefix_hit_rate"],
+                "cold_cached_token_fraction":
+                    cold_stats["cached_token_fraction"],
+                "warm_cached_token_fraction":
+                    warm_stats["cached_token_fraction"],
+                "cache_evictions": warm_stats["cache_evictions"],
+                "outputs_identical": bool(prefix_parity),
             },
         }
     # paper reference points (H800, llama-2-7B)

@@ -4,9 +4,11 @@
 
 Prints ``name,us_per_call,derived`` CSV (plus # section markers).
 After a run that includes ``llm_generation``, writes the serving
-numbers (tokens/s, prefill/decode split, compile counts, parity) to
+numbers (tokens/s, prefill/decode split, compile counts, parity, pool
+utilization, and the shared-prefix mix's prefix-cache hit rate /
+cached-token fraction / with-vs-without-sharing speedup) to
 ``BENCH_serving.json`` so future PRs have a perf trajectory to compare
-against.
+against; CI uploads the file as a workflow artifact per run.
 """
 
 from __future__ import annotations

@@ -4,7 +4,10 @@
         --requests 8 --slots 4
 
 Reduced configs on CPU; the full configs' serve_step is exercised (and
-memory-proved) by the dry-run decode cells.
+memory-proved) by the dry-run decode cells.  ``--workload sysprompt``
+serves the shared-prefix mix (a few system-prompt templates × unique
+tails) and prints the radix prefix cache's hit-rate stats; disable the
+cache with ``--no-prefix-cache`` for an A/B run.
 """
 
 from __future__ import annotations
@@ -16,7 +19,8 @@ import jax
 from repro.configs import get_config, list_archs, reduced_config
 from repro.models import api
 from repro.runtime.server import (ChunkedServer, SlotServer,
-                                  sharegpt_like_requests)
+                                  sharegpt_like_requests,
+                                  sysprompt_sharegpt_requests)
 
 
 def main() -> None:
@@ -41,6 +45,21 @@ def main() -> None:
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="paged-cache pool size in blocks (default: "
                          "slots * ceil(max_len / block_size))")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the radix-tree prefix cache over the "
+                         "paged pool (A/B; cached greedy outputs are "
+                         "bit-identical either way)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a request when it emits this token id "
+                         "(device-side, both engines); default: "
+                         "length-only stopping")
+    ap.add_argument("--workload", default="sharegpt",
+                    choices=("sharegpt", "sysprompt"),
+                    help="sharegpt: log-normal independent prompts; "
+                         "sysprompt: shared system-prompt templates x "
+                         "unique tails (exercises prefix sharing)")
+    ap.add_argument("--templates", type=int, default=2,
+                    help="number of shared templates (sysprompt)")
     ap.add_argument("--max-input", type=int, default=32)
     ap.add_argument("--max-output", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
@@ -59,16 +78,30 @@ def main() -> None:
                             max_len=max_len, chunk=args.chunk,
                             span=args.span, paged=not args.contiguous,
                             block_size=args.block_size,
-                            num_blocks=args.pool_blocks)
+                            num_blocks=args.pool_blocks,
+                            prefix_cache=not args.no_prefix_cache,
+                            eos_id=args.eos_id)
     else:
         srv = SlotServer(cfg, params, batch_slots=args.slots,
-                         max_len=max_len)
-    reqs = sharegpt_like_requests(args.requests, cfg.vocab_size,
-                                  max_input=args.max_input,
-                                  max_output=args.max_output,
-                                  seed=args.seed)
+                         max_len=max_len, eos_id=args.eos_id)
+    if args.workload == "sysprompt":
+        if args.max_input < 2:
+            raise SystemExit(
+                "--workload sysprompt needs --max-input >= 2 (a shared "
+                "template prefix plus at least one unique tail token)")
+        reqs = sysprompt_sharegpt_requests(
+            args.requests, cfg.vocab_size, num_templates=args.templates,
+            template_len=max(args.max_input // 2, 1),
+            max_input=args.max_input, max_output=args.max_output,
+            seed=args.seed)
+    else:
+        reqs = sharegpt_like_requests(args.requests, cfg.vocab_size,
+                                      max_input=args.max_input,
+                                      max_output=args.max_output,
+                                      seed=args.seed)
     stats = srv.serve(reqs)
     print(f"arch={args.arch} engine={args.engine} "
+          f"workload={args.workload} "
           f"requests={int(stats['requests'])} "
           f"tokens={int(stats['tokens'])} "
           f"throughput={stats['tokens_per_s']:.1f} tok/s "
@@ -84,6 +117,16 @@ def main() -> None:
               f"stalls={int(stats['admission_stalls'])}, "
               f"capacity {int(stats['kv_tokens_capacity'])} vs "
               f"{int(stats['kv_tokens_contiguous'])} contiguous tokens)")
+    if "prefix_cache_enabled" in stats:
+        print(f"  prefix-cache: hit-rate="
+              f"{stats['prefix_hit_rate']:.2f} "
+              f"({int(stats['prefix_hit_requests'])}/"
+              f"{int(stats['requests'])} requests), "
+              f"cached-token-frac={stats['cached_token_fraction']:.2f} "
+              f"({int(stats['prefix_cached_tokens'])}/"
+              f"{int(stats['prompt_tokens_total'])} prompt tokens), "
+              f"resident={int(stats['cached_blocks'])} blocks, "
+              f"evictions={int(stats['cache_evictions'])}")
 
 
 if __name__ == "__main__":

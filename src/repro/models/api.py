@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.models import common, encdec, hybrid, ssm_lm, transformer
+from repro.models import (attention, common, encdec, hybrid, ssm_lm,
+                          transformer)
 from repro.models.common import ParamSpec
 
 Params = Dict[str, Any]
@@ -122,6 +123,19 @@ def chunk_step(cfg: ModelConfig, params: Params, cache: Params,
     raise NotImplementedError(
         f"chunked prefill is transformer-only for now (family "
         f"{cfg.family}); use prefill/decode_step")
+
+
+def cow_copy_block(cfg: ModelConfig, cache: Params, src, dst) -> Params:
+    """Copy physical pool block `src` to `dst` in a paged KV cache
+    (all layers; scalar operands, one compile).  Used by the serving
+    runtime's copy-on-write path when a request extends into a block
+    shared through the radix prefix cache."""
+    if cfg.family not in _TRANSFORMER_FAMILIES:
+        raise NotImplementedError(
+            f"paged KV cache is transformer-only for now (family "
+            f"{cfg.family})")
+    k, v = attention.copy_paged_block(cache["k"], cache["v"], src, dst)
+    return {"k": k, "v": v}
 
 
 def compile_count(fn) -> int:

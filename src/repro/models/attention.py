@@ -562,6 +562,21 @@ def update_paged_cache(ck: jax.Array, cv: jax.Array, k1: jax.Array,
             cv_flat.reshape(NB, bs, KH, hd))
 
 
+def copy_paged_block(ck: jax.Array, cv: jax.Array, src: jax.Array,
+                     dst: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Copy-on-write helper: duplicate physical block `src` into `dst`
+    across every layer of the stacked pool ([L, NB, bs, KH, hd]).
+
+    The radix prefix cache (runtime/prefix_cache.py) shares full blocks
+    read-only; when a request's write frontier lands inside a shared,
+    partially-matching block, the server copies it to a private block
+    first so the cached entry is never mutated.  `src`/`dst` are scalar
+    operands, so the jitted copy compiles once.
+    """
+    return (ck.at[:, dst].set(ck[:, src]),
+            cv.at[:, dst].set(cv[:, src]))
+
+
 def attention_flops(B: int, Sq: int, Sk: int, H: int, hd: int,
                     causal: bool) -> float:
     """Useful FLOPs of the score+value matmuls (for MODEL_FLOPS)."""

@@ -20,17 +20,35 @@ contiguous ``max_len + chunk`` region per slot up front, the cache is a
 shared pool of fixed-size blocks ([num_blocks, block_size, KH, hd] per
 layer) addressed through a per-slot block table — a fixed-shape
 [slots, max_blocks] int32 jit operand, so the compiled programs are
-unchanged in number.  A host-side allocator hands blocks to a slot as
-its prefill/decode frontier advances and returns them at harvest;
-admission reserves each request's worst case
-(ceil(min(in_len + max_new, max_len) / block_size) blocks) and, when
-the pool cannot cover it, leaves the request queued (backpressure)
-instead of failing — under the log-normal ShareGPT mix this serves the
-same traffic in a fraction of the contiguous footprint
-(``BENCH_serving.json`` pool metrics).  ``paged=False`` restores the
-contiguous layout for A/B; greedy outputs are bit-identical either way
-(masked positions carry exactly-zero softmax weight, so the virtual
-view through the table matches the contiguous cache).
+unchanged in number.  ``paged=False`` restores the contiguous layout
+for A/B; greedy outputs are bit-identical either way (masked positions
+carry exactly-zero softmax weight, so the virtual view through the
+table matches the contiguous cache).
+
+On top of the paged pool sits a **radix-tree prefix cache**
+(``prefix_cache=True``, runtime/prefix_cache.py): finished requests
+insert their full-block token prefix into a tree whose leaves point at
+physical pool blocks, and ``_admit`` matches each new prompt against
+it — shared blocks map straight into the slot's block table (refcount
++1 each), chunked prefill resumes at the first uncached token, and the
+admission reservation covers only the uncovered tail.  A prompt that
+extends into a shared but partially-matching block copies it to a
+private block first (copy-on-write; one jitted block-to-block pool
+copy) so cached entries are never mutated.  Freeing is uniformly
+``decref``: blocks return to the free list only when no slot and no
+tree node holds them, and when the free list runs dry the allocator
+evicts refcount-0 cached blocks in LRU order.  Sharing is a pure
+host-side table construction — the jitted programs and their O(1)
+compile counts are untouched, and greedy outputs stay bit-identical to
+``prefix_cache=False`` (cached KV was produced by the same jitted
+steps on the same token/position inputs).
+
+With ``eos_id`` set, generation also stops when the model emits that
+token: the device-side stop mask of the decode span folds in
+``tok == eos_id`` alongside the length checks (both engines), at the
+cost of syncing the span's final position/stop state back to the host.
+``eos_id=None`` (default) preserves the length-only behavior, where
+the host mirror never reads device state.
 
 ``SlotServer`` — the original engine, kept as the measured baseline:
 prefill feeds one token per ``decode_step`` through a scan and
@@ -49,7 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +76,7 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.models import api, transformer
+from repro.runtime.prefix_cache import BlockPool, RadixPrefixCache
 
 Params = Any
 
@@ -89,6 +108,33 @@ def sharegpt_like_requests(n: int, vocab: int, *, max_input: int = 128,
     return reqs
 
 
+def sysprompt_sharegpt_requests(n: int, vocab: int, *,
+                                num_templates: int = 2,
+                                template_len: int = 64,
+                                max_input: int = 128,
+                                max_output: int = 128, seed: int = 0
+                                ) -> List[Request]:
+    """Shared-prefix serving mix: N fixed system-prompt templates, each
+    request one template plus a log-normal unique tail — the production
+    pattern (millions of users hitting the same few system prompts /
+    few-shot templates) that the radix prefix cache turns from repeated
+    prefill compute into block-table lookups."""
+    assert template_len < max_input
+    rng = np.random.default_rng(seed)
+    templates = [rng.integers(0, vocab, size=template_len).astype(np.int32)
+                 for _ in range(num_templates)]
+    reqs = []
+    for i in range(n):
+        t = templates[int(rng.integers(num_templates))]
+        tail_len = int(np.clip(rng.lognormal(2.0, 0.8), 1,
+                               max_input - template_len))
+        out_len = int(np.clip(rng.lognormal(3.5, 0.7), 4, max_output))
+        tail = rng.integers(0, vocab, size=tail_len).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=np.concatenate([t, tail]),
+                            max_new=out_len))
+    return reqs
+
+
 def clone_requests(reqs: List[Request]) -> List[Request]:
     """Fresh Request objects for re-serving the same mix (A/B runs)."""
     return [Request(rid=r.rid, prompt=r.prompt.copy(), max_new=r.max_new)
@@ -112,23 +158,32 @@ class ChunkedServer:
     The host mirrors position/emission bookkeeping in numpy — greedy
     decoding with length-only stopping is fully deterministic, so the
     mirror never needs to read device state; tokens cross to the host
-    only when a finished request is harvested.  All mirror arrays are
-    int32 (matching the jit operands) so operand dtypes never drift
-    between calls.
+    only when a finished request is harvested.  With ``eos_id`` set the
+    stop rule additionally depends on emitted tokens, so the span's
+    final pos/out_len/active state syncs back instead.  All mirror
+    arrays are int32 (matching the jit operands) so operand dtypes
+    never drift between calls.
 
     With ``paged=True`` (default) the KV cache is a shared block pool
     plus per-slot block tables; `_ensure_blocks` assigns physical
-    blocks as a slot's frontier advances and `_harvest` returns them,
-    so a slot only ever pins ceil(live_prefix / block_size) blocks.
-    ``_admit`` reserves the request's worst case against the pool and
-    backpressures (leaves the queue head waiting) when it cannot,
-    instead of capping concurrency at a fixed per-slot max_len region.
+    blocks as a slot's frontier advances and `_harvest` drops the
+    slot's references.  ``_admit`` reserves the request's worst case
+    *minus its prefix-cache hit* against the pool and backpressures
+    (leaves the queue head waiting) when it cannot, instead of capping
+    concurrency at a fixed per-slot max_len region.  With
+    ``prefix_cache=True`` finished requests feed a radix tree of
+    full-block token runs; admission maps matched blocks into the
+    table, resumes prefill at the first uncached token, and
+    copy-on-writes when the request extends into a shared,
+    partially-matching block.
     """
 
     def __init__(self, cfg: ModelConfig, params: Params, *,
                  batch_slots: int = 8, max_len: int = 512,
                  chunk: int = 16, span: int = 8, paged: bool = True,
-                 block_size: int = 16, num_blocks: Optional[int] = None):
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 eos_id: Optional[int] = None):
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
         self.params = params
@@ -137,6 +192,8 @@ class ChunkedServer:
         self.chunk = chunk
         self.span = span
         self.paged = paged
+        self.eos_id = eos_id
+        self.prefix_cache: Optional[RadixPrefixCache] = None
         if paged:
             self.block_size = block_size
             # virtual blocks per slot; real writes never pass max_len
@@ -148,19 +205,33 @@ class ChunkedServer:
                 block_size=block_size, num_blocks=self.num_blocks)
             self.block_table = np.full((batch_slots, self.max_blocks),
                                        -1, np.int32)
-            self._free_blocks = list(range(self.num_blocks))
+            self.pool = BlockPool(self.num_blocks)
+            if prefix_cache:
+                self.prefix_cache = RadixPrefixCache(self.pool, block_size)
             self._slot_blocks: List[List[int]] = [[] for _ in range(batch_slots)]
+            self._num_shared = np.zeros(batch_slots, np.int32)
+            self._cow_pending = [False] * batch_slots
             self._reserved = np.zeros(batch_slots, np.int32)
-            self._reserve_free = self.num_blocks
+            self._reserved_total = 0
             self.peak_blocks = 0
             self.admission_stalls = 0
+            self.total_prompt_tokens = 0
+            self.cached_prompt_tokens = 0
+            self.prefix_hits = 0
+            # donating the cache keeps the COW copy in place — without
+            # it, XLA materializes a second full pool to update 1 block
+            self._cow_fn = jax.jit(
+                lambda cache, src, dst: api.cow_copy_block(cfg, cache,
+                                                           src, dst),
+                donate_argnums=(0,))
         else:
             # + chunk headroom: chunk writes start at the valid frontier
             # and must never clamp (see attention.update_cache)
             self.cache = api.init_cache(cfg, batch_slots, max_len + chunk)
         self.cur_tok = jnp.zeros((batch_slots,), jnp.int32)
         self.out_buf = jnp.zeros((batch_slots, max_len), jnp.int32)
-        # host-owned mirror (deterministic; never read back from device)
+        # host-owned mirror (deterministic; never read back from device
+        # unless eos stopping is on)
         self.pos = np.zeros(batch_slots, np.int32)
         self.out_len = np.zeros(batch_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
@@ -213,45 +284,135 @@ class ChunkedServer:
             pos = pos + inc
             tok = jnp.where(active, nxt, tok)
             active = active & (out_len < max_new) & (pos < cap)
+            if self.eos_id is not None:
+                # device-side EOS stop, folded into the existing mask:
+                # the EOS token itself is emitted, then the slot stops
+                active = active & (nxt != self.eos_id)
             return (cache, tok, pos, out_buf, out_len, active), None
 
         carry = (cache, cur_tok, pos, out_buf, out_len, active)
         carry, _ = lax.scan(step, carry, None, length=self.span)
-        cache, cur_tok, _, out_buf, _, _ = carry
-        return cache, cur_tok, out_buf
+        cache, cur_tok, pos, out_buf, out_len, active = carry
+        return cache, cur_tok, out_buf, pos, out_len, active
 
     def compile_counts(self) -> Dict[str, int]:
         """Programs compiled per work unit — O(1) by construction."""
-        return {"chunk_step": api.compile_count(self._chunk_fn),
-                "decode_span": api.compile_count(self._span_fn)}
+        counts = {"chunk_step": api.compile_count(self._chunk_fn),
+                  "decode_span": api.compile_count(self._span_fn)}
+        if self.paged:
+            counts["cow_copy"] = max(api.compile_count(self._cow_fn), 0)
+        return counts
 
-    # -- host-side block allocator (paged) --------------------------------
+    # -- host-side refcounted block allocator (paged) ---------------------
     def _blocks_needed(self, req: Request) -> int:
         """Worst-case block demand: the frontier never passes
         min(in_len + max_new, max_len)."""
         span_len = min(len(req.prompt) + req.max_new, self.max_len)
         return -(-span_len // self.block_size)
 
+    def _available_blocks(self) -> int:
+        """Blocks admission may still promise: free + evictable cached,
+        minus reservations already outstanding."""
+        ev = (self.prefix_cache.evictable_blocks()
+              if self.prefix_cache is not None else 0)
+        return self.pool.num_free() + ev - self._reserved_total
+
+    def _blocks_in_use(self) -> int:
+        """Working set: blocks currently pinned or owned by a request.
+        Refcount-0 tree residue is reclaimable on demand and excluded,
+        so peak/pool-utilization keep measuring concurrent demand (the
+        PR-2 footprint metric), not cache residency — residency is
+        reported separately as ``cached_blocks``."""
+        in_use = self.num_blocks - self.pool.num_free()
+        if self.prefix_cache is not None:
+            in_use -= self.prefix_cache.evictable_blocks()
+        return in_use
+
+    def _reclaim(self, n: int) -> None:
+        """Grow the free list to ≥ n blocks with ONE LRU eviction sweep
+        (an evict() call walks the radix tree, so callers batch their
+        whole deficit instead of evicting block by block).  Admission
+        accounting guarantees the evictable supply covers every
+        reservation."""
+        deficit = n - self.pool.num_free()
+        if deficit > 0:
+            assert self.prefix_cache is not None, "block pool over-committed"
+            freed = self.prefix_cache.evict(deficit)
+            assert freed >= deficit, \
+                "block pool over-committed (nothing evictable)"
+
+    def _take_block(self) -> int:
+        """One owned block (refcount 1), evicting when the list is dry."""
+        self._reclaim(1)
+        return self.pool.alloc()
+
+    def _match_prefix(self, prompt: np.ndarray
+                      ) -> Tuple[List[int], Optional[int], int]:
+        """Radix lookup, capped so at least the last prompt token is
+        recomputed (its logits seed generation).  Returns (shared full
+        blocks, copy-on-write block, matched tokens inside it)."""
+        full, partial, plen = self.prefix_cache.match(prompt)
+        bs = self.block_size
+        # max(..., 0) keeps zero-length prompts (served as an immediate
+        # emit, as before this cache existed) out of the index math
+        usable = max(min(len(full) * bs + plen, len(prompt) - 1), 0)
+        nfull = usable // bs
+        cow_len = usable - nfull * bs
+        if cow_len < max(bs // 2, 1):
+            # a short partial overlap (e.g. a universal BOS token at
+            # the root) isn't worth a block copy, and counting it as a
+            # hit would read ~1.0 hit-rate on traffic with no real
+            # sharing; recompute those few tokens instead
+            return full[:nfull], None, 0
+        # the capped frontier landed inside a matched block: map it
+        # shared and let _ensure_blocks copy it before the first write
+        cow = full[nfull] if nfull < len(full) else partial
+        return full[:nfull], cow, cow_len
+
     def _ensure_blocks(self, s: int, upto: int) -> None:
-        """Assign physical blocks so slot s covers virtual [0, upto)."""
-        need = -(-upto // self.block_size)
-        assert need <= self._reserved[s], \
-            f"slot {s}: demand {need} blocks exceeds reservation"
+        """Assign physical blocks so slot s covers virtual [0, upto),
+        resolving a pending copy-on-write before the write frontier
+        reaches the shared block."""
+        bs = self.block_size
         owned = self._slot_blocks[s]
+        need = -(-upto // bs)
+        # one batched eviction sweep for everything this call will
+        # allocate: the COW copy target plus the frontier growth
+        cow_now = (self._cow_pending[s]
+                   and upto > int(self._num_shared[s]) * bs)
+        self._reclaim(max(need - len(owned), 0) + bool(cow_now))
+        if cow_now:
+            ci = int(self._num_shared[s])
+            src = owned[ci]
+            dst = self._take_block()
+            self.cache = self._cow_fn(self.cache, np.int32(src),
+                                      np.int32(dst))
+            self.block_table[s, ci] = dst
+            owned[ci] = dst
+            self.pool.decref(src)
+            self._reserved[s] -= 1
+            self._reserved_total -= 1
+            self._cow_pending[s] = False
+        assert need - len(owned) <= self._reserved[s], \
+            f"slot {s}: demand {need} blocks exceeds reservation"
         while len(owned) < need:
-            assert self._free_blocks, "block pool over-committed"
-            b = self._free_blocks.pop()
+            b = self._take_block()
             self.block_table[s, len(owned)] = b
             owned.append(b)
-        in_use = self.num_blocks - len(self._free_blocks)
-        self.peak_blocks = max(self.peak_blocks, in_use)
+            self._reserved[s] -= 1
+            self._reserved_total -= 1
+        self.peak_blocks = max(self.peak_blocks, self._blocks_in_use())
 
     def _free_slot_blocks(self, s: int) -> None:
+        """free == decref: cached blocks stay resident (evictable),
+        exclusively-owned blocks return to the free list."""
         for b in self._slot_blocks[s]:
-            self._free_blocks.append(b)
+            self.pool.decref(b)
         self._slot_blocks[s] = []
+        self._num_shared[s] = 0
+        self._cow_pending[s] = False
         self.block_table[s, :] = -1
-        self._reserve_free += int(self._reserved[s])
+        self._reserved_total -= int(self._reserved[s])
         self._reserved[s] = 0
 
     # -- host-side scheduling --------------------------------------------
@@ -266,28 +427,79 @@ class ChunkedServer:
                     raise ValueError(
                         f"request {req.rid}: prompt length "
                         f"{len(req.prompt)} exceeds max_len {self.max_len}")
+                matched = 0
                 if self.paged:
-                    needed = self._blocks_needed(req)
-                    if needed > self._reserve_free:
+                    shared: List[int] = []
+                    cow, cow_len = None, 0
+                    # cheap lower bound first: when even a fully-cached
+                    # prompt could not admit, skip the radix walk and
+                    # pin/rollback churn that a stalled queue head
+                    # would otherwise replay every serve-loop iteration
+                    best_shared = (max((len(req.prompt) - 1)
+                                       // self.block_size, 0)
+                                   if self.prefix_cache is not None else 0)
+                    fail_fast = (self._blocks_needed(req) - best_shared
+                                 > self._available_blocks())
+                    if not fail_fast and self.prefix_cache is not None:
+                        shared, cow, cow_len = self._match_prefix(req.prompt)
+                        # pin the hit before the supply check; matched
+                        # blocks are mapped, not drawn from the pool
+                        for b in shared:
+                            self.pool.incref(b)
+                        if cow is not None:
+                            self.pool.incref(cow)
+                        matched = len(shared) * self.block_size + cow_len
+                    # worst case minus the cache-covered prefix: a
+                    # fully-cached prompt admits even when the free
+                    # pool alone couldn't hold its unshared footprint
+                    needed = self._blocks_needed(req) - len(shared)
+                    if (cow is not None
+                            and needed > self._available_blocks()):
+                        # tight supply: the COW pin holds an evictable
+                        # block hostage without reducing demand (the
+                        # private copy still needs a fresh block), so
+                        # drop the partial match and recompute its
+                        # < block_size tokens rather than stall/fail
+                        self.pool.decref(cow)
+                        cow, cow_len = None, 0
+                        matched = len(shared) * self.block_size
+                    if fail_fast or needed > self._available_blocks():
+                        for b in shared:        # roll the pin back
+                            self.pool.decref(b)
+                        if cow is not None:
+                            self.pool.decref(cow)
                         if not any(r is not None for r in self.slot_req):
                             # nothing in flight to free up blocks
                             raise ValueError(
-                                f"request {req.rid}: needs {needed} KV "
-                                f"blocks but the pool has "
-                                f"{self.num_blocks}; grow num_blocks")
+                                f"request {req.rid}: needs "
+                                f"{self._blocks_needed(req)} KV blocks "
+                                f"but the pool has {self.num_blocks}; "
+                                f"grow num_blocks")
                         # backpressure: wait for a harvest to free blocks
                         self.admission_stalls += 1
                         break
                     self._reserved[s] = needed
-                    self._reserve_free -= needed
+                    self._reserved_total += needed
+                    self._slot_blocks[s] = list(shared)
+                    for i, b in enumerate(shared):
+                        self.block_table[s, i] = b
+                    self._num_shared[s] = len(shared)
+                    self._cow_pending[s] = cow is not None
+                    if cow is not None:
+                        self.block_table[s, len(shared)] = cow
+                        self._slot_blocks[s].append(cow)
+                    self.total_prompt_tokens += len(req.prompt)
+                    self.cached_prompt_tokens += matched
+                    self.prefix_hits += matched > 0
                 queue.pop(0)
                 # the pos cap stops generation at max_len - in_len tokens;
                 # flag the shortfall instead of harvesting silently short
                 req.truncated = len(req.prompt) + req.max_new > self.max_len
                 self.slot_req[s] = req
                 self.mode[s] = "prefill"
-                self.prompt_off[s] = 0
-                self.pos[s] = 0
+                # chunked prefill resumes at the first uncached token
+                self.prompt_off[s] = matched
+                self.pos[s] = matched
                 self.out_len[s] = 0
 
     def _check_done(self, s: int) -> None:
@@ -328,6 +540,10 @@ class ChunkedServer:
             tokens_host, self.pos.copy(), n_tokens, is_decode, emit,
             self.out_len.copy(), self._device_block_table())
         self.cur_tok.block_until_ready()
+        # EOS needs the emitted tokens on the host; length-only stopping
+        # stays transfer-free
+        toks = (np.asarray(self.cur_tok) if self.eos_id is not None
+                else None)
         prompt_tokens = 0
         for s, req in enumerate(self.slot_req):
             if req is None:
@@ -340,11 +556,17 @@ class ChunkedServer:
                 if emit[s]:                 # prompt exhausted: first token
                     self.mode[s] = "decode"
                     self.out_len[s] += 1
-                    self._check_done(s)
+                    if toks is not None and int(toks[s]) == self.eos_id:
+                        self.mode[s] = "done"
+                    else:
+                        self._check_done(s)
             elif self.mode[s] == "decode":
                 self.out_len[s] += 1
                 self.pos[s] += 1
-                self._check_done(s)
+                if toks is not None and int(toks[s]) == self.eos_id:
+                    self.mode[s] = "done"
+                else:
+                    self._check_done(s)
         return prompt_tokens
 
     def _run_decode_span(self) -> None:
@@ -354,7 +576,8 @@ class ChunkedServer:
             np.int32)
         # deterministic mirror of the on-device span, computed up front
         # so the paged allocator knows each slot's final frontier before
-        # the device writes to it
+        # the device writes to it (EOS may stop a slot earlier than the
+        # sim — that only over-assigns blocks within the reservation)
         cap = self.max_len - 1
         sim_pos = self.pos.copy()
         sim_out = self.out_len.copy()
@@ -368,14 +591,23 @@ class ChunkedServer:
         if self.paged:
             for s in np.flatnonzero(active):
                 self._ensure_blocks(s, int(sim_pos[s]))
-        self.cache, self.cur_tok, self.out_buf = self._span_fn(
+        (self.cache, self.cur_tok, self.out_buf, pos_d, out_d,
+         act_d) = self._span_fn(
             self.params, self.cache, self.cur_tok, self.out_buf,
             self.pos.copy(), self.out_len.copy(), active, max_new,
             self._device_block_table())
         self.cur_tok.block_until_ready()
-        self.pos = sim_pos
-        self.out_len = sim_out
-        for s in np.flatnonzero(active & ~sim_act):
+        if self.eos_id is None:
+            self.pos = sim_pos
+            self.out_len = sim_out
+            done_now = active & ~sim_act
+        else:
+            # EOS stopping is data-dependent: sync the span's final
+            # bookkeeping instead of trusting the length-only sim
+            self.pos = np.array(pos_d, np.int32)
+            self.out_len = np.array(out_d, np.int32)
+            done_now = active & ~np.asarray(act_d)
+        for s in np.flatnonzero(done_now):
             self.mode[s] = "done"
 
     def _harvest(self) -> int:
@@ -396,8 +628,25 @@ class ChunkedServer:
             self.slot_req[s] = None
             self.mode[s] = "idle"
             if self.paged:
+                if self.prefix_cache is not None:
+                    self._insert_prefix(s, req)
                 self._free_slot_blocks(s)
         return served
+
+    def _insert_prefix(self, s: int, req: Request) -> None:
+        """Feed the finished request's full-block prefix back into the
+        radix tree (before the decrefs of `_free_slot_blocks`, so newly
+        adopted blocks are retained instead of freed).  The last output
+        token never has KV written (it is never fed back), so the run
+        covers positions [0, in_len + out_len - 1)."""
+        assert not self._cow_pending[s], \
+            f"slot {s}: unresolved copy-on-write at harvest"
+        run = np.concatenate(
+            [req.prompt, np.asarray(req.output[:-1], np.int32)])
+        nfull = len(run) // self.block_size
+        if nfull:
+            self.prefix_cache.insert(run[:nfull * self.block_size],
+                                     self._slot_blocks[s][:nfull])
 
     # -- main loop ---------------------------------------------------------
     def serve(self, requests: List[Request]) -> Dict[str, float]:
@@ -408,8 +657,13 @@ class ChunkedServer:
         prefill_tokens = decode_steps = chunk_steps = spans = 0
         if self.paged:
             # pool metrics are per serve() run, not per server lifetime
-            self.peak_blocks = self.num_blocks - len(self._free_blocks)
+            self.peak_blocks = self._blocks_in_use()
             self.admission_stalls = 0
+            self.total_prompt_tokens = 0
+            self.cached_prompt_tokens = 0
+            self.prefix_hits = 0
+            evict0 = (self.prefix_cache.evicted_blocks
+                      if self.prefix_cache is not None else 0)
         while queue or any(r is not None for r in self.slot_req):
             self._admit(queue)
             if any(m == "prefill" for m in self.mode):
@@ -454,6 +708,24 @@ class ChunkedServer:
                 "kv_tokens_contiguous": float(contiguous_tokens),
                 "admission_stalls": float(self.admission_stalls),
             })
+            if self.prefix_cache is not None:
+                total = self.total_prompt_tokens
+                stats.update({
+                    "prefix_cache_enabled": 1.0,
+                    "prompt_tokens_total": float(total),
+                    "prefix_cached_tokens": float(
+                        self.cached_prompt_tokens),
+                    "cached_token_fraction": (
+                        self.cached_prompt_tokens / total if total
+                        else 0.0),
+                    "prefix_hit_requests": float(self.prefix_hits),
+                    "prefix_hit_rate": (self.prefix_hits / len(requests)
+                                        if requests else 0.0),
+                    "cache_evictions": float(
+                        self.prefix_cache.evicted_blocks - evict0),
+                    "cached_blocks": float(
+                        self.prefix_cache.cached_block_count()),
+                })
         return stats
 
 
@@ -471,16 +743,19 @@ class SlotServer:
     (identical greedy outputs, measured speedup), with two correctness
     fixes over the seed: `pos0` is a real prefill argument (see
     `_prefill_impl`) and the first emitted token is stop-checked so
-    max_new is honored even at 1.
+    max_new is honored even at 1.  ``eos_id`` stops a slot after it
+    emits that token (same rule as ChunkedServer).
     """
 
     def __init__(self, cfg: ModelConfig, params: Params, *,
-                 batch_slots: int = 8, max_len: int = 512):
+                 batch_slots: int = 8, max_len: int = 512,
+                 eos_id: Optional[int] = None):
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
+        self.eos_id = eos_id
         self.cache = api.init_cache(cfg, batch_slots, max_len)
         self.pos = jnp.zeros((batch_slots,), jnp.int32)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
@@ -535,6 +810,11 @@ class SlotServer:
         return {"decode_step": api.compile_count(self._decode),
                 "prefill_one": api.compile_count(self._prefill_one)}
 
+    def _stopped(self, req: Request, slot: int, tok: int) -> bool:
+        return (len(req.output) >= req.max_new
+                or int(self.pos[slot]) >= self.max_len - 1
+                or (self.eos_id is not None and tok == self.eos_id))
+
     # -- main loop ---------------------------------------------------------
     def serve(self, requests: List[Request]) -> Dict[str, float]:
         queue = list(requests)
@@ -553,13 +833,15 @@ class SlotServer:
                     prefill_s += time.perf_counter() - tc
                     req.output.append(tok)
                     next_tok = next_tok.at[s].set(tok)
-                    if (len(req.output) >= req.max_new
-                            or int(self.pos[s]) >= self.max_len - 1):
+                    if self._stopped(req, s, tok):
                         req.done = True
                         served_tokens += len(req.prompt) + len(req.output)
                         self.slot_req[s] = None
             if not any(r is not None for r in self.slot_req):
-                break
+                # every admitted request stopped on its first prefill
+                # token (max_new=1 or an immediate EOS): go back to
+                # admission — a `break` here dropped the queued rest
+                continue
             # one lockstep decode step for all active slots
             tc = time.perf_counter()
             logits, self.cache = self._decode(
@@ -575,8 +857,7 @@ class SlotServer:
                     continue
                 req.output.append(int(toks[s]))
                 next_tok = next_tok.at[s].set(int(toks[s]))
-                if (len(req.output) >= req.max_new
-                        or int(self.pos[s]) >= self.max_len - 1):
+                if self._stopped(req, s, int(toks[s])):
                     req.done = True
                     served_tokens += len(req.prompt) + len(req.output)
                     self.slot_req[s] = None
