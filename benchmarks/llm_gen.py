@@ -23,6 +23,15 @@ both against the identical mix with `prefix_cache=False`.  Reported:
 tokens/s with/without sharing, prefix-hit-rate, cached-token fraction,
 and greedy-output parity (cached must stay bit-identical).
 
+A third, repetitive protocol (`repetitive_requests`: tiled-motif
+prompts, traffic re-served wave over wave) A/Bs speculative decoding:
+``spec_decode=K`` drafts from the device-resident n-gram suffix table
+and verifies K+1-token windows in one dispatch, against the identical
+mix on the plain span loop.  Reported: tokens/s both ways, draft
+acceptance rate, accepted-tokens-per-step (the span loop's is 1.0 by
+construction), and greedy-output parity (exact acceptance — outputs
+must be bit-identical, asserted by CI on the uploaded snapshot).
+
 Also reports the prefill/decode wall-time split, the compiled-program
 counts, greedy-output parity, and the paged pool's utilization
 (peak blocks in use / pool size, KV token capacity vs the contiguous
@@ -43,7 +52,8 @@ from repro.core.bench import register
 from repro.core.timer import Timing
 from repro.models import api
 from repro.runtime.server import (ChunkedServer, SlotServer,
-                                  clone_requests, sharegpt_like_requests,
+                                  clone_requests, repetitive_requests,
+                                  sharegpt_like_requests,
                                   sysprompt_sharegpt_requests)
 
 # Snapshot of the last llm_generation run, keyed by param dtype;
@@ -180,6 +190,51 @@ def llm_generation():
         rows.append(Timing(
             f"measured(cpu)/prefix-output-parity/{dtype_name}",
             0.0, 0, 1, derived=prefix_parity, derived_name="bool"))
+        # speculative-decoding A/B: repetitive mix (high n-gram hit
+        # rate, the proposer's production case — retried/templated
+        # generations), warm suffix table vs the plain span loop.
+        # Greedy acceptance is exact, so outputs must stay identical.
+        rep_reqs = repetitive_requests(8, cfg.vocab_size, motif_len=8,
+                                       reps=3, max_output=48, seed=2)
+        spec_kw = dict(batch_slots=4, max_len=96, chunk=16, span=8,
+                       paged=True, block_size=16)
+        span_srv = ChunkedServer(cfg, params, **spec_kw)
+        span_srv.serve(clone_requests(rep_reqs))     # compile warmup
+        rep_base = clone_requests(rep_reqs)
+        rep_base_stats = span_srv.serve(rep_base)
+        spec_srv = ChunkedServer(cfg, params, spec_decode=4, **spec_kw)
+        # cold wave compiles AND teaches the suffix table the mix's
+        # continuations; the timed warm wave drafts from it
+        spec_srv.serve(clone_requests(rep_reqs))
+        rep_spec = clone_requests(rep_reqs)
+        rep_spec_stats = spec_srv.serve(rep_spec)
+        spec_parity = float(all(a.output == b.output
+                                for a, b in zip(rep_base, rep_spec)))
+        spec_speedup = (rep_spec_stats["tokens_per_s"]
+                        / rep_base_stats["tokens_per_s"]
+                        if rep_base_stats["tokens_per_s"] > 0 else 0.0)
+        rows.append(Timing(
+            f"measured(cpu)/repetitive-span/{dtype_name}", 0.0, 0, 1,
+            derived=rep_base_stats["tokens_per_s"],
+            derived_name="tokens_per_s"))
+        rows.append(Timing(
+            f"measured(cpu)/repetitive-spec-decode/{dtype_name}",
+            0.0, 0, 1, derived=rep_spec_stats["tokens_per_s"],
+            derived_name="tokens_per_s"))
+        rows.append(Timing(
+            f"measured(cpu)/spec-decode-speedup/{dtype_name}",
+            0.0, 0, 1, derived=spec_speedup, derived_name="x"))
+        rows.append(Timing(
+            f"measured(cpu)/spec-acceptance-rate/{dtype_name}",
+            0.0, 0, 1, derived=rep_spec_stats["spec_acceptance_rate"],
+            derived_name="frac"))
+        rows.append(Timing(
+            f"measured(cpu)/spec-tokens-per-step/{dtype_name}",
+            0.0, 0, 1, derived=rep_spec_stats["spec_tokens_per_step"],
+            derived_name="tok"))
+        rows.append(Timing(
+            f"measured(cpu)/spec-output-parity/{dtype_name}",
+            0.0, 0, 1, derived=spec_parity, derived_name="bool"))
         SERVING_RESULTS[dtype_name] = {
             "slot_tokens_per_s": slot_stats["tokens_per_s"],
             "chunked_tokens_per_s": stats["tokens_per_s"],
@@ -215,6 +270,25 @@ def llm_generation():
                     warm_stats["cached_token_fraction"],
                 "cache_evictions": warm_stats["cache_evictions"],
                 "outputs_identical": bool(prefix_parity),
+            },
+            "spec_decode": {
+                "k": rep_spec_stats["spec_k"],
+                "span_tokens_per_s": rep_base_stats["tokens_per_s"],
+                "spec_tokens_per_s": rep_spec_stats["tokens_per_s"],
+                "speedup": spec_speedup,
+                # drafts accepted / drafts issued (K per active slot;
+                # a lower bound when the emit budget caps a window)
+                "acceptance_rate":
+                    rep_spec_stats["spec_acceptance_rate"],
+                # emitted tokens per slot per verify dispatch =
+                # accepted drafts + the always-present bonus token;
+                # the span loop's value is exactly 1.0, so > 1.0 is
+                # the speculative win
+                "accepted_tokens_per_step":
+                    rep_spec_stats["spec_tokens_per_step"],
+                "verify_compiles":
+                    spec_srv.compile_counts()["verify_step"],
+                "outputs_identical": bool(spec_parity),
             },
         }
     # paper reference points (H800, llama-2-7B)

@@ -7,7 +7,10 @@ Reduced configs on CPU; the full configs' serve_step is exercised (and
 memory-proved) by the dry-run decode cells.  ``--workload sysprompt``
 serves the shared-prefix mix (a few system-prompt templates × unique
 tails) and prints the radix prefix cache's hit-rate stats; disable the
-cache with ``--no-prefix-cache`` for an A/B run.
+cache with ``--no-prefix-cache`` for an A/B run.  ``--spec-decode K``
+turns on speculative decoding (n-gram drafts + one-dispatch verify,
+bit-identical outputs); pair it with ``--workload repetitive`` to see
+the accepted-tokens-per-step climb above 1.
 """
 
 from __future__ import annotations
@@ -19,6 +22,7 @@ import jax
 from repro.configs import get_config, list_archs, reduced_config
 from repro.models import api
 from repro.runtime.server import (ChunkedServer, SlotServer,
+                                  repetitive_requests,
                                   sharegpt_like_requests,
                                   sysprompt_sharegpt_requests)
 
@@ -53,13 +57,26 @@ def main() -> None:
                     help="stop a request when it emits this token id "
                          "(device-side, both engines); default: "
                          "length-only stopping")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="speculative decoding (chunked engine): draft "
+                         "up to K tokens per slot from a device-"
+                         "resident n-gram suffix table and verify all "
+                         "of them in one fixed-shape dispatch, "
+                         "accepting the longest prefix that matches "
+                         "the model's own greedy argmax — outputs are "
+                         "bit-identical to K=0, only the number of "
+                         "model dispatches per token changes.  "
+                         "Default 0 = off (plain decode spans)")
     ap.add_argument("--workload", default="sharegpt",
-                    choices=("sharegpt", "sysprompt"),
+                    choices=("sharegpt", "sysprompt", "repetitive"),
                     help="sharegpt: log-normal independent prompts; "
                          "sysprompt: shared system-prompt templates x "
-                         "unique tails (exercises prefix sharing)")
+                         "unique tails (exercises prefix sharing); "
+                         "repetitive: tiled-motif prompts (high n-gram "
+                         "hit rate — exercises --spec-decode)")
     ap.add_argument("--templates", type=int, default=2,
-                    help="number of shared templates (sysprompt)")
+                    help="number of shared templates (sysprompt) / "
+                         "motifs (repetitive)")
     ap.add_argument("--max-input", type=int, default=32)
     ap.add_argument("--max-output", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
@@ -80,11 +97,21 @@ def main() -> None:
                             block_size=args.block_size,
                             num_blocks=args.pool_blocks,
                             prefix_cache=not args.no_prefix_cache,
-                            eos_id=args.eos_id)
+                            eos_id=args.eos_id,
+                            spec_decode=args.spec_decode)
     else:
+        if args.spec_decode:
+            raise SystemExit("--spec-decode needs the chunked engine "
+                             "(the slot baseline has no verify path)")
         srv = SlotServer(cfg, params, batch_slots=args.slots,
                          max_len=max_len, eos_id=args.eos_id)
-    if args.workload == "sysprompt":
+    if args.workload == "repetitive":
+        reqs = repetitive_requests(args.requests, cfg.vocab_size,
+                                   num_motifs=args.templates,
+                                   motif_len=max(args.max_input // 4, 1),
+                                   reps=4, max_output=args.max_output,
+                                   seed=args.seed)
+    elif args.workload == "sysprompt":
         if args.max_input < 2:
             raise SystemExit(
                 "--workload sysprompt needs --max-input >= 2 (a shared "
@@ -117,6 +144,13 @@ def main() -> None:
               f"stalls={int(stats['admission_stalls'])}, "
               f"capacity {int(stats['kv_tokens_capacity'])} vs "
               f"{int(stats['kv_tokens_contiguous'])} contiguous tokens)")
+    if "spec_k" in stats:
+        print(f"  spec-decode: K={int(stats['spec_k'])} "
+              f"accepted={int(stats['spec_accepted_tokens'])}/"
+              f"{int(stats['spec_drafted_tokens'])} drafts "
+              f"(rate={stats['spec_acceptance_rate']:.2f}), "
+              f"{stats['spec_tokens_per_step']:.2f} tokens/step "
+              f"over {int(stats['spec_steps'])} verify dispatches")
     if "prefix_cache_enabled" in stats:
         print(f"  prefix-cache: hit-rate="
               f"{stats['prefix_hit_rate']:.2f} "

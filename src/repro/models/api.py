@@ -6,6 +6,7 @@ Used by launch/{dryrun,train,serve}.py, tests and benchmarks:
     loss_fn                                     training objective
     init_cache / prefill / decode_step          serving
     chunk_step                                  chunked-prefill serving
+    verify_step                                 speculative-decode verify
     compile_count                               jit program-cache probe
     input_specs / make_batch                    shape cells (dry-run / smoke)
     model_flops                                 6ND-style accounting
@@ -122,6 +123,23 @@ def chunk_step(cfg: ModelConfig, params: Params, cache: Params,
                                       n_tokens, block_table)
     raise NotImplementedError(
         f"chunked prefill is transformer-only for now (family "
+        f"{cfg.family}); use prefill/decode_step")
+
+
+def verify_step(cfg: ModelConfig, params: Params, cache: Params,
+                tokens: jax.Array, pos: jax.Array,
+                block_table: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Params]:
+    """Speculative-decode verify: score a [B, C] window of (current
+    token + C-1 drafts) per slot and return the greedy argmax at every
+    row (`chunk_step` returns only the last valid row's logits).  One
+    fixed-shape program — the serving runtime's spec-decode path
+    (runtime/spec_decode.py) compiles it exactly once."""
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.verify_step(cfg, params, cache, tokens, pos,
+                                       block_table)
+    raise NotImplementedError(
+        f"speculative decoding is transformer-only for now (family "
         f"{cfg.family}); use prefill/decode_step")
 
 

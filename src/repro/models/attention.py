@@ -541,6 +541,15 @@ def update_paged_cache(ck: jax.Array, cv: jax.Array, k1: jax.Array,
     contiguous path writes into its `+ chunk` headroom and overwrites
     before they become visible — here they simply never land, so a slot
     can only ever touch its own blocks.
+
+    Speculative decoding leans on the same contract for rollback
+    (transformer.verify_step / runtime/spec_decode.py): a verify
+    window writes K+1 rows at [pos, pos+K], the server then truncates
+    the slot's block-table frontier back to the accepted position, and
+    the rejected rows' KV is either beyond the (rolled-back) frontier
+    inside a still-owned block — masked out of every read and
+    overwritten by the next window before the frontier passes it — or
+    was dropped right here because its block was never allocated.
     """
     NB, bs, KH, hd = ck.shape
     B, C = k1.shape[:2]

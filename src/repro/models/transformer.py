@@ -244,31 +244,13 @@ def decode_step(cfg, params, cache: Params, token: jax.Array,
     return logits, {"k": new_k, "v": new_v}
 
 
-def chunk_step(cfg, params, cache: Params, tokens: jax.Array,
-               pos: jax.Array, n_tokens: jax.Array,
-               block_table: Optional[jax.Array] = None
+def _chunk_fwd(cfg, params, cache: Params, tokens: jax.Array,
+               pos: jax.Array, block_table: Optional[jax.Array]
                ) -> Tuple[jax.Array, Params]:
-    """One chunked-prefill/decode step for a batch of server slots.
-
-    tokens [B,C] int32 — per slot, the next `n_tokens[b]` tokens of its
-    request (a C-token prefill chunk, a single decode token at row 0, or
-    nothing for an idle slot; rows past n_tokens[b] are padding).
-    pos [B] int32 — each slot's current cache length; the chunk's k/v is
-    written at cache positions [pos, pos+C) (padding rows included —
-    they sit beyond the valid frontier, are never attended by valid
-    queries, and the next step's write starts at the new frontier so
-    they are overwritten before becoming visible).
-    n_tokens [B] int32 in [0, C].
-    block_table [B, max_blocks] int32 (optional) — cache is a paged
-    block pool; reads/writes gather/scatter through the table (padding
-    rows whose virtual block is unallocated are dropped instead of
-    overwritten later).  The table has a fixed shape, so the paged
-    program compiles once too.
-
-    Returns (logits [B, vocab] at each slot's last valid row, cache).
-    Shapes are fixed by (B, C) only, so a server compiles this once no
-    matter how prompt lengths are distributed.
-    """
+    """Shared serving forward over a [B, C] token window written into
+    the KV cache at [pos, pos+C): the body of both `chunk_step` (which
+    reads out the last valid row) and `verify_step` (which reads out
+    every row).  Returns (final hidden [B, C, d], cache)."""
     B, C = tokens.shape
     x = params["embed"].astype(jnp.bfloat16)[tokens]          # [B,C,d]
     x = constrain(x, ("batch", None, "embed"))
@@ -299,10 +281,67 @@ def chunk_step(cfg, params, cache: Params, tokens: jax.Array,
     x, (new_k, new_v) = lax.scan(
         body, x, (params["layers"], cache["k"], cache["v"]))
     x = apply_norm(cfg, x, params["final_norm"])
+    return x, {"k": new_k, "v": new_v}
+
+
+def chunk_step(cfg, params, cache: Params, tokens: jax.Array,
+               pos: jax.Array, n_tokens: jax.Array,
+               block_table: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Params]:
+    """One chunked-prefill/decode step for a batch of server slots.
+
+    tokens [B,C] int32 — per slot, the next `n_tokens[b]` tokens of its
+    request (a C-token prefill chunk, a single decode token at row 0, or
+    nothing for an idle slot; rows past n_tokens[b] are padding).
+    pos [B] int32 — each slot's current cache length; the chunk's k/v is
+    written at cache positions [pos, pos+C) (padding rows included —
+    they sit beyond the valid frontier, are never attended by valid
+    queries, and the next step's write starts at the new frontier so
+    they are overwritten before becoming visible).
+    n_tokens [B] int32 in [0, C].
+    block_table [B, max_blocks] int32 (optional) — cache is a paged
+    block pool; reads/writes gather/scatter through the table (padding
+    rows whose virtual block is unallocated are dropped instead of
+    overwritten later).  The table has a fixed shape, so the paged
+    program compiles once too.
+
+    Returns (logits [B, vocab] at each slot's last valid row, cache).
+    Shapes are fixed by (B, C) only, so a server compiles this once no
+    matter how prompt lengths are distributed.
+    """
+    B, C = tokens.shape
+    x, cache = _chunk_fwd(cfg, params, cache, tokens, pos, block_table)
     last = jnp.clip(n_tokens - 1, 0, C - 1)                   # [B]
     h_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # [B,1,d]
     logits = logits_fn(cfg, params, h_last)[:, 0]
-    return logits, {"k": new_k, "v": new_v}
+    return logits, cache
+
+
+def verify_step(cfg, params, cache: Params, tokens: jax.Array,
+                pos: jax.Array, block_table: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Params]:
+    """Speculative-decode verify: score a [B, C] window (row 0 = each
+    slot's current token, rows 1..C-1 = draft tokens) in ONE fixed-shape
+    call and return the greedy argmax at EVERY row, not just the last.
+
+    Exactly the `chunk_step` program shape — same KV write path
+    (`update_cache` / `update_paged_cache` at [pos, pos+C)), same
+    cache-aware causal read (`chunk_attention` over the gathered paged
+    view) — so a server running it compiles exactly one extra program
+    and row j's prediction is bit-identical to what a one-token-at-a-
+    time decode of the same prefix would produce.  The caller accepts
+    the longest draft prefix matching the argmax chain and rolls its
+    frontier back over the rejected suffix: the rejected rows' KV
+    writes land beyond the rolled-back frontier, where the position
+    masks never read and the next window's writes overwrite (or, past
+    the paged block table's allocated entries, were dropped at scatter
+    time — see attention.update_paged_cache).
+
+    Returns (preds [B, C] int32 greedy next-token ids, cache).
+    """
+    x, cache = _chunk_fwd(cfg, params, cache, tokens, pos, block_table)
+    logits = logits_fn(cfg, params, x)                        # [B,C,V]
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
 
 def prefill(cfg, params, tokens: jax.Array, cache: Params,

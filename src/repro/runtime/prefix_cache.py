@@ -30,8 +30,10 @@ sharing a pure host-side table construction:
     (runtime/server.py does the copy with one jitted block-to-block
     pool op).  ``insert`` adopts a finished request's novel full-block
     suffix into the tree (deduplicating against existing entries) and
-    ``evict`` reclaims refcount-0 blocks leaf-first in LRU order when
-    the free list runs dry.
+    ``evict`` reclaims refcount-0 blocks tail-first in coldest-block
+    order when the free list runs dry — LRU stamps are per BLOCK, not
+    per node, so a lookup that matched only the head of an edge leaves
+    the edge's tail cold and evictable before warmer leaves.
 
 The tree and pool are host-side numpy/python only — the jitted
 ``chunk_step`` / ``decode_step`` programs see nothing but the same
@@ -116,7 +118,7 @@ class BlockPool:
 
 class _Node:
     __slots__ = ("parent", "children", "tokens", "blocks", "last_access",
-                 "key")
+                 "block_access", "key")
 
     def __init__(self, parent: Optional["_Node"], tokens: np.ndarray,
                  blocks: List[int], last_access: int, bs: int):
@@ -125,6 +127,11 @@ class _Node:
         self.tokens = tokens            # int32, len == len(blocks) * bs
         self.blocks = blocks
         self.last_access = last_access
+        # per-block LRU stamps (parallel to `blocks`): a lookup bumps
+        # only the blocks it actually matched, so a node whose head is
+        # hot can still have its cold tail evicted before a warmer
+        # leaf elsewhere (node-granular stamps pinned whole edges)
+        self.block_access = [last_access] * len(blocks)
         # child-map key under `parent`; captured at creation because
         # trailing eviction may shorten `tokens` before unlinking
         self.key = tokens[:bs].tobytes() if len(tokens) else b""
@@ -183,6 +190,7 @@ class RadixPrefixCache:
                         best, best_ov = c, ov
                 if best is not None:
                     best.last_access = self._tick
+                    best.block_access[0] = self._tick
                     return full, best.blocks[0], best_ov
                 return full, None, 0
             child.last_access = self._tick
@@ -193,6 +201,9 @@ class RadixPrefixCache:
                                       tokens[off + f * bs:
                                              off + (f + 1) * bs])):
                 f += 1
+            # only the matched prefix of the edge is hot; the tail
+            # keeps its older stamps so eviction can take it first
+            child.block_access[:f] = [self._tick] * f
             full.extend(child.blocks[:f])
             off += f * bs
             if f < nb:
@@ -202,6 +213,7 @@ class RadixPrefixCache:
                     child.tokens[f * bs:(f + 1) * bs],
                     tokens[off:off + bs])
                 if ov > 0:
+                    child.block_access[f] = self._tick
                     return full, child.blocks[f], ov
                 return full, None, 0
             node = child
@@ -245,16 +257,20 @@ class RadixPrefixCache:
                                       tokens[off + f * bs:
                                              off + (f + 1) * bs])):
                 f += 1
+            child.block_access[:f] = [self._tick] * f
             if f < nb:
                 # split the edge at block f; the lower half keeps the
-                # original node's children and trailing blocks
+                # original node's children, trailing blocks and their
+                # (possibly colder) per-block stamps
                 lower = _Node(child, child.tokens[f * bs:].copy(),
                               child.blocks[f:], child.last_access, bs)
+                lower.block_access = child.block_access[f:]
                 lower.children = child.children
                 for c in lower.children.values():
                     c.parent = lower
                 child.tokens = child.tokens[:f * bs].copy()
                 child.blocks = child.blocks[:f]
+                child.block_access = child.block_access[:f]
                 child.children = {lower.key: lower}
             off += f * bs
             bi += f
@@ -274,34 +290,46 @@ class RadixPrefixCache:
         return out
 
     def evict(self, n: int) -> int:
-        """Free up to `n` refcount-0 cached blocks, LRU-leaf first.
+        """Free up to `n` refcount-0 cached blocks, coldest BLOCK first
+        (per-block LRU stamps, not per-node: a hot node's cold tail
+        goes before a warmer leaf elsewhere).
 
-        Blocks leave a leaf tail-first so every surviving node still
-        holds a valid block-aligned prefix run; a leaf drained to zero
-        blocks is unlinked and may expose its parent as the next
-        candidate.  Blocks pinned by an active request (refcount > 0)
-        are never touched.  Returns the number of blocks freed.
+        Blocks still leave a leaf tail-first so every surviving node
+        holds a valid block-aligned prefix run; the heap is keyed by
+        each leaf's tail-block stamp and the leaf is re-pushed after
+        every pop, so interleaved tails drain in global stamp order.
+        A leaf drained to zero blocks is unlinked and may expose its
+        parent as the next candidate.  Blocks pinned by an active
+        request (refcount > 0) are never touched (a pinned tail also
+        shields the blocks above it — tail-first order is what keeps
+        runs prefix-valid).  Returns the number of blocks freed.
         """
         freed = 0
-        heap = [(leaf.last_access, id(leaf), leaf)
-                for leaf in self._leaves()]
+        heap = [(leaf.block_access[-1], id(leaf), leaf)
+                for leaf in self._leaves() if leaf.blocks]
         heapq.heapify(heap)
         while heap and freed < n:
             _, _, leaf = heapq.heappop(heap)
-            if leaf.children or leaf is self.root:
+            if leaf.children or leaf is self.root or not leaf.blocks:
                 continue                # became internal since collection
-            while (leaf.blocks and freed < n
-                   and self.pool.refcount[leaf.blocks[-1]] == 0):
-                self.pool.release_cached(leaf.blocks.pop())
-                freed += 1
-                self.evicted_blocks += 1
+            if self.pool.refcount[leaf.blocks[-1]] > 0:
+                continue                # pinned tail: nothing evictable
+            self.pool.release_cached(leaf.blocks.pop())
+            leaf.block_access.pop()
             leaf.tokens = leaf.tokens[:len(leaf.blocks) * self.bs]
-            if not leaf.blocks:
+            freed += 1
+            self.evicted_blocks += 1
+            if leaf.blocks:
+                heapq.heappush(heap,
+                               (leaf.block_access[-1], id(leaf), leaf))
+            else:
                 parent = leaf.parent
                 del parent.children[leaf.key]
-                if parent is not self.root and not parent.children:
-                    heapq.heappush(heap,
-                                   (parent.last_access, id(parent), parent))
+                if (parent is not self.root and not parent.children
+                        and parent.blocks):
+                    heapq.heappush(
+                        heap,
+                        (parent.block_access[-1], id(parent), parent))
         return freed
 
     # -- integrity (tests) ------------------------------------------------
@@ -316,6 +344,8 @@ class RadixPrefixCache:
             node = stack.pop()
             assert len(node.tokens) == len(node.blocks) * self.bs, \
                 "edge not block-aligned"
+            assert len(node.block_access) == len(node.blocks), \
+                "per-block LRU stamps out of sync with blocks"
             for b in node.blocks:
                 assert b not in seen, f"block {b} in two nodes"
                 seen.add(b)

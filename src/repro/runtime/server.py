@@ -50,6 +50,17 @@ cost of syncing the span's final position/stop state back to the host.
 ``eos_id=None`` (default) preserves the length-only behavior, where
 the host mirror never reads device state.
 
+``spec_decode=K`` (default 0 = off) turns the decode-only stretches
+speculative (runtime/spec_decode.py): a device-resident n-gram suffix
+table drafts up to K tokens per slot, one fixed-shape ``verify_step``
+dispatch — the same program shape as a prefill chunk — scores all
+B×(K+1) tokens, and the longest draft prefix matching the greedy
+argmax chain is accepted plus one bonus token.  Acceptance is exact
+for greedy decoding, so outputs stay bit-identical to ``K=0``; the
+rejected suffix's cache writes are rolled back host-side by
+truncating the slot's block-table frontier.  One extra compiled
+program total: {chunk_step, decode_span, verify_step}.
+
 ``SlotServer`` — the original engine, kept as the measured baseline:
 prefill feeds one token per ``decode_step`` through a scan and
 recompiles per distinct prompt length; the decode loop syncs to the
@@ -76,6 +87,7 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.models import api, transformer
+from repro.runtime import spec_decode as spec
 from repro.runtime.prefix_cache import BlockPool, RadixPrefixCache
 
 Params = Any
@@ -135,6 +147,28 @@ def sysprompt_sharegpt_requests(n: int, vocab: int, *,
     return reqs
 
 
+def repetitive_requests(n: int, vocab: int, *, num_motifs: int = 2,
+                        motif_len: int = 8, reps: int = 3,
+                        max_output: int = 48, seed: int = 0
+                        ) -> List[Request]:
+    """Highly repetitive mix: each prompt tiles one of a few short
+    motifs, so identical requests recur within and across waves — the
+    retried/templated-generation traffic that is the n-gram draft
+    proposer's best case (greedy outputs of a repeated prompt repeat
+    too, and the shared suffix table replays them).  Spec-decode A/Bs
+    on this mix show accepted-tokens-per-step well above 1 even on CPU
+    CI, where a model-based drafter would drown in dispatch overhead."""
+    rng = np.random.default_rng(seed)
+    motifs = [rng.integers(0, vocab, size=motif_len).astype(np.int32)
+              for _ in range(num_motifs)]
+    reqs = []
+    for i in range(n):
+        motif = motifs[int(rng.integers(num_motifs))]
+        reqs.append(Request(rid=i, prompt=np.tile(motif, reps),
+                            max_new=max_output))
+    return reqs
+
+
 def clone_requests(reqs: List[Request]) -> List[Request]:
     """Fresh Request objects for re-serving the same mix (A/B runs)."""
     return [Request(rid=r.rid, prompt=r.prompt.copy(), max_new=r.max_new)
@@ -154,6 +188,10 @@ class ChunkedServer:
         token at row 0 (Sarathi-style coalescing).
       * decode span — `span` consecutive decode steps scanned on device
         when no prefill is pending.
+      * verify step — with ``spec_decode=K``, decode-only stretches
+        instead run one [slots, K+1] speculative window per dispatch:
+        n-gram drafts verified against the model's own argmax chain
+        (bit-identical emissions, >= 1 token per slot per dispatch).
 
     The host mirrors position/emission bookkeeping in numpy — greedy
     decoding with length-only stopping is fully deterministic, so the
@@ -183,7 +221,9 @@ class ChunkedServer:
                  chunk: int = 16, span: int = 8, paged: bool = True,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 spec_decode: int = 0,
+                 spec_n_ctx: int = spec.DEFAULT_N_CTX):
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
         self.params = params
@@ -193,6 +233,14 @@ class ChunkedServer:
         self.span = span
         self.paged = paged
         self.eos_id = eos_id
+        self.spec_decode = int(spec_decode)
+        assert self.spec_decode >= 0
+        if self.spec_decode and not paged:
+            # the contiguous cache's + chunk headroom must absorb the
+            # verify window's beyond-frontier writes (paged scatters
+            # simply drop them past the block table)
+            assert self.spec_decode < chunk, \
+                "spec_decode window (K+1) must fit the chunk headroom"
         self.prefix_cache: Optional[RadixPrefixCache] = None
         if paged:
             self.block_size = block_size
@@ -239,6 +287,15 @@ class ChunkedServer:
         self.prompt_off = np.zeros(batch_slots, np.int32)
         self._chunk_fn = jax.jit(self._chunk_impl)
         self._span_fn = jax.jit(self._span_impl)
+        if self.spec_decode:
+            self.ngram_table = spec.init_ngram_table(
+                self.spec_decode, spec_n_ctx)
+            self._verify_fn = jax.jit(self._spec_impl)
+            self.spec_steps = 0
+            self.spec_slot_steps = 0
+            self.spec_drafted = 0
+            self.spec_accepted = 0
+            self.spec_emitted = 0
 
     def _device_block_table(self) -> np.ndarray:
         """Snapshot of the block table as a jit operand (fixed shape;
@@ -295,12 +352,22 @@ class ChunkedServer:
         cache, cur_tok, pos, out_buf, out_len, active = carry
         return cache, cur_tok, out_buf, pos, out_len, active
 
+    def _spec_impl(self, params, cache, table, cur_tok, out_buf, pos,
+                   out_len, active, max_new, block_table):
+        return spec.spec_decode_step(
+            self.cfg, params, cache, table, cur_tok, out_buf, pos,
+            out_len, active, max_new,
+            block_table if self.paged else None,
+            max_len=self.max_len, eos_id=self.eos_id)
+
     def compile_counts(self) -> Dict[str, int]:
         """Programs compiled per work unit — O(1) by construction."""
         counts = {"chunk_step": api.compile_count(self._chunk_fn),
                   "decode_span": api.compile_count(self._span_fn)}
         if self.paged:
             counts["cow_copy"] = max(api.compile_count(self._cow_fn), 0)
+        if self.spec_decode:
+            counts["verify_step"] = api.compile_count(self._verify_fn)
         return counts
 
     # -- host-side refcounted block allocator (paged) ---------------------
@@ -402,6 +469,28 @@ class ChunkedServer:
             self._reserved[s] -= 1
             self._reserved_total -= 1
         self.peak_blocks = max(self.peak_blocks, self._blocks_in_use())
+
+    def _truncate_blocks(self, s: int, upto: int) -> None:
+        """Roll slot s's block-table frontier back so it owns exactly
+        the blocks covering virtual [0, upto) — the paged-cache
+        rollback after a verify step rejects draft tokens.  Blocks
+        wholly beyond the frontier return to the pool and their
+        admission reservation is restored (they were drawn from it by
+        `_ensure_blocks` pre-verify).  Only frontier growth is ever
+        rolled back: shared prefix blocks and a resolved COW copy all
+        sit below the decode frontier, so refcount/COW invariants are
+        untouched.  Stale KV the rejected rows scattered beyond `upto`
+        lands where the position masks never read and the next write
+        window lands first (see attention.update_paged_cache)."""
+        owned = self._slot_blocks[s]
+        keep = -(-upto // self.block_size)
+        assert keep >= int(self._num_shared[s]) + bool(self._cow_pending[s])
+        while len(owned) > keep:
+            b = owned.pop()
+            self.block_table[s, len(owned)] = -1
+            self.pool.decref(b)
+            self._reserved[s] += 1
+            self._reserved_total += 1
 
     def _free_slot_blocks(self, s: int) -> None:
         """free == decref: cached blocks stay resident (evictable),
@@ -610,6 +699,57 @@ class ChunkedServer:
         for s in np.flatnonzero(done_now):
             self.mode[s] = "done"
 
+    def _run_spec_step(self) -> None:
+        """One speculative draft→verify→accept step for every decoding
+        slot (runtime/spec_decode.py): up to K drafts per slot from the
+        device-resident n-gram table, one fixed-shape `verify_step`
+        dispatch scoring all B×(K+1) tokens, longest argmax-matching
+        prefix accepted plus the bonus token from the first mismatch.
+        Acceptance is data-dependent, so (unlike the length-only span
+        path) the final pos/out_len/active state always syncs back;
+        the paged block tables are then rolled back to each slot's
+        accepted frontier."""
+        K = self.spec_decode
+        active = np.array([m == "decode" for m in self.mode])
+        max_new = np.array(
+            [r.max_new if r is not None else 0 for r in self.slot_req],
+            np.int32)
+        cap = self.max_len - 1
+        if self.paged:
+            for s in np.flatnonzero(active):
+                # cover the verify window only up to the slot's emit
+                # budget: the window rows past it can never be accepted
+                # and their writes drop beyond the table, so admission
+                # reservations (computed from max_new) always suffice
+                budget = min(int(max_new[s]) - int(self.out_len[s]),
+                             cap - int(self.pos[s]))
+                self._ensure_blocks(
+                    s, int(self.pos[s]) + min(K + 1, max(budget, 1)))
+        (self.cache, self.ngram_table, self.cur_tok, self.out_buf,
+         pos_d, out_d, act_d, emit_d) = self._verify_fn(
+            self.params, self.cache, self.ngram_table, self.cur_tok,
+            self.out_buf, self.pos.copy(), self.out_len.copy(), active,
+            max_new, self._device_block_table())
+        self.cur_tok.block_until_ready()
+        emit = np.asarray(emit_d)
+        self.pos = np.array(pos_d, np.int32)
+        self.out_len = np.array(out_d, np.int32)
+        done_now = active & ~np.asarray(act_d)
+        if self.paged:
+            # rejected drafts: shrink the block-table frontier back to
+            # the accepted positions (restores the reservation drawn
+            # pre-verify; stale KV beyond it is never read)
+            for s in np.flatnonzero(active):
+                self._truncate_blocks(s, int(self.pos[s]))
+        for s in np.flatnonzero(done_now):
+            self.mode[s] = "done"
+        nact = int(active.sum())
+        self.spec_steps += 1
+        self.spec_slot_steps += nact
+        self.spec_drafted += K * nact
+        self.spec_emitted += int(emit.sum())
+        self.spec_accepted += int(np.maximum(emit - 1, 0).sum())
+
     def _harvest(self) -> int:
         done_slots = [s for s in range(self.B) if self.mode[s] == "done"]
         if not done_slots:
@@ -664,6 +804,14 @@ class ChunkedServer:
             self.prefix_hits = 0
             evict0 = (self.prefix_cache.evicted_blocks
                       if self.prefix_cache is not None else 0)
+        if self.spec_decode:
+            # spec metrics are per serve() run too (the n-gram table
+            # persists across runs — warm drafts are a feature)
+            self.spec_steps = 0
+            self.spec_slot_steps = 0
+            self.spec_drafted = 0
+            self.spec_accepted = 0
+            self.spec_emitted = 0
         while queue or any(r is not None for r in self.slot_req):
             self._admit(queue)
             if any(m == "prefill" for m in self.mode):
@@ -673,9 +821,12 @@ class ChunkedServer:
                 chunk_steps += 1
             elif any(m == "decode" for m in self.mode):
                 tc = time.perf_counter()
-                self._run_decode_span()
+                if self.spec_decode:
+                    self._run_spec_step()
+                else:
+                    self._run_decode_span()
+                    decode_steps += self.span
                 decode_s += time.perf_counter() - tc
-                decode_steps += self.span
                 spans += 1
             served_tokens += self._harvest()
         dt = time.perf_counter() - t0
@@ -695,6 +846,21 @@ class ChunkedServer:
             "compiled_programs": float(sum(max(v, 0)
                                            for v in compiles.values())),
         }
+        if self.spec_decode:
+            stats.update({
+                "spec_k": float(self.spec_decode),
+                "spec_steps": float(self.spec_steps),
+                "spec_drafted_tokens": float(self.spec_drafted),
+                "spec_accepted_tokens": float(self.spec_accepted),
+                "spec_acceptance_rate": (
+                    self.spec_accepted / self.spec_drafted
+                    if self.spec_drafted else 0.0),
+                # mean emitted tokens per slot per verify dispatch; the
+                # span loop's equivalent is exactly 1.0
+                "spec_tokens_per_step": (
+                    self.spec_emitted / self.spec_slot_steps
+                    if self.spec_slot_steps else 0.0),
+            })
         if self.paged:
             contiguous_tokens = self.B * (self.max_len + self.chunk)
             stats.update({

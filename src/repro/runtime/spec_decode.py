@@ -1,0 +1,207 @@
+"""Speculative decoding: device-resident n-gram drafting + batched
+verify over the serving KV cache.
+
+The decode span loop (runtime/server.py) is latency-bound the same way
+the paper's Hopper microbenchmarks show tensor-core pipelines are
+issue-bound when fed one operation at a time: every model dispatch
+emits exactly one token per slot, so the per-step weight sweep —
+reading every parameter once — is amortized over a single token.
+Speculative decoding widens the in-flight work per dispatch without
+changing the emitted tokens: a cheap proposer drafts K continuation
+tokens per slot, ONE `verify_step` call (the same fixed program shape
+as a prefill chunk, models/transformer.py) scores all B×(K+1) tokens
+against the cache, and the server accepts the longest draft prefix
+that matches the greedy argmax chain — exact-parity rejection for
+greedy decoding, so ``spec_decode=K`` is bit-identical to ``K=0``.
+
+Drafting is a **device-resident n-gram suffix table**: one
+``[n_ctx, K]`` int32 table, shared by every slot, mapping a hash of
+the last two emitted tokens to the K tokens that most recently
+followed that context anywhere in the batch — repeated traffic (the
+production pattern the prefix cache already exploits for prompts)
+re-serves its own continuations no matter which slot it lands on.  Both
+the lookup (propose) and the update (learn from the tokens just
+emitted, read back out of the device-side output buffer) happen inside
+the jitted step — no host round-trip touches a token.  Hash collisions
+and stale entries only lower the acceptance rate, never correctness:
+every draft is verified against the model's own argmax before it can
+be emitted.
+
+Cache semantics: `verify_step` writes KV for ALL K+1 window rows at
+positions [pos, pos+K].  After acceptance the valid frontier is
+``pos + n_emit``; the rejected suffix rows' writes sit beyond it,
+where the position masks of `chunk_attention`/`decode_attention`
+never read and the next window's writes land first — or, beyond the
+slot's allocated block-table entries, were dropped at scatter time
+(attention.update_paged_cache).  The server additionally rolls the
+slot's block-table frontier back host-side (ChunkedServer.
+_truncate_blocks) so over-allocated blocks return to the pool and the
+refcount/copy-on-write invariants of runtime/prefix_cache.py survive
+rollback.
+
+Everything here is shape-fixed by (B, K): one compiled program no
+matter how drafts are accepted, keeping the serving runtime's O(1)
+compile budget at {chunk_step, decode_span, verify_step}.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+
+# Context-hash multiplier: a prime that spreads (prev, cur) token pairs
+# over the table without degenerating modulo the power-of-two default
+# n_ctx (a multiplier ≡ ±1 mod n_ctx would collapse the hash onto the
+# token difference/sum).
+_HASH_PRIME = 7919
+DEFAULT_N_CTX = 32768
+
+
+def ngram_hash(t_prev: jax.Array, t_cur: jax.Array, n_ctx: int
+               ) -> jax.Array:
+    """Bucket of the 2-token context (t_prev, t_cur).  int32 overflow
+    for vocab sizes past ~270k wraps deterministically — collisions
+    cost acceptance rate, not correctness."""
+    return (t_prev * _HASH_PRIME + t_cur) % n_ctx
+
+
+def init_ngram_table(k: int, n_ctx: int = DEFAULT_N_CTX) -> jax.Array:
+    """Suffix-lookup table [n_ctx, K] int32, shared across every slot
+    (what one request's decode teaches, the next request drafts from —
+    repeated traffic re-serves its own suffixes no matter which slot
+    it lands on).  Zero-init: an unseen context drafts token 0, which
+    is verified like any other draft (accepted only when the model's
+    argmax IS token 0)."""
+    return jnp.zeros((n_ctx, k), jnp.int32)
+
+
+def propose(table: jax.Array, cur_tok: jax.Array, out_buf: jax.Array,
+            out_len: jax.Array) -> jax.Array:
+    """Draft K tokens per slot from the suffix table.
+
+    Context is the last two emitted tokens — ``cur_tok`` (the slot's
+    pending token, == out_buf[out_len-1]) and its predecessor from the
+    device-side output buffer (0-sentinel while out_len < 2).  Pure
+    gather: [n_ctx, K] -> [B, K], no host involvement.
+    """
+    n_ctx = table.shape[0]
+    B, T = out_buf.shape
+    row = jnp.arange(B)
+    i2 = jnp.clip(out_len - 2, 0, T - 1)
+    t_prev = jnp.where(out_len >= 2, out_buf[row, i2], 0)
+    ctx = ngram_hash(t_prev, cur_tok, n_ctx)
+    return table[ctx]                                         # [B, K]
+
+
+def accept_greedy(drafts: jax.Array, preds: jax.Array) -> jax.Array:
+    """Longest-prefix greedy acceptance: n_acc[b] = number of leading
+    drafts matching the model's argmax chain.  drafts [B, K] vs
+    preds [B, K+1] (verify_step row j predicts the token AFTER window
+    row j, so draft j is checked against preds[:, j])."""
+    K = drafts.shape[1]
+    match = (drafts == preds[:, :K]).astype(jnp.int32)
+    return jnp.cumprod(match, axis=1).sum(axis=1)             # [B]
+
+
+def update_ngram(table: jax.Array, out_buf: jax.Array,
+                 out_len: jax.Array, active: jax.Array) -> jax.Array:
+    """Learn from the tokens just emitted, inside the jitted step.
+
+    For each run of K output tokens whose last token just landed
+    (starts p in (out_len_before - K, out_len - K], at most K+1 of
+    them), store ``out_buf[p : p+K]`` under the hash of its 2-token
+    context ``(out_buf[p-2], out_buf[p-1])``.  Runs reaching into the
+    prompt (p < 2) and inactive slots scatter to a dropped index.
+    Duplicate contexts within one window (or across slots) resolve
+    arbitrarily — either value is a genuinely observed continuation.
+    """
+    n_ctx, K = table.shape
+    B, T = out_buf.shape
+    j = jnp.arange(K + 1, dtype=jnp.int32)
+    p = out_len[:, None] - K - j[None, :]                     # [B, K+1]
+    ok = active[:, None] & (p >= 2)
+    c_prev = jnp.take_along_axis(out_buf, jnp.clip(p - 2, 0, T - 1),
+                                 axis=1)
+    c_cur = jnp.take_along_axis(out_buf, jnp.clip(p - 1, 0, T - 1),
+                                axis=1)
+    ctx = ngram_hash(c_prev, c_cur, n_ctx)                    # [B, K+1]
+    run_idx = jnp.clip(p[:, :, None] + jnp.arange(K)[None, None, :],
+                       0, T - 1)
+    runs = jnp.take_along_axis(out_buf, run_idx.reshape(B, (K + 1) * K),
+                               axis=1).reshape(B, K + 1, K)
+    ctx = jnp.where(ok, ctx, n_ctx)                           # drop sink
+    return table.at[ctx.reshape(-1)].set(
+        runs.reshape(B * (K + 1), K), mode="drop")
+
+
+def spec_decode_step(cfg, params, cache, table: jax.Array,
+                     cur_tok: jax.Array, out_buf: jax.Array,
+                     pos: jax.Array, out_len: jax.Array,
+                     active: jax.Array, max_new: jax.Array,
+                     block_table: Optional[jax.Array], *,
+                     max_len: int, eos_id: Optional[int]
+                     ) -> Tuple[jax.Array, ...]:
+    """One draft → verify → accept step for every decoding slot.
+
+    Jit-able as a single program (the server wraps it in one jax.jit,
+    its only spec-decode compile).  Per active slot it emits
+    ``n_emit = accepted drafts + 1 bonus`` tokens (>= 1, so progress
+    never stalls), capped by the slot's remaining budget
+    ``min(max_new - out_len, max_len - 1 - pos)`` and truncated at the
+    first emitted ``eos_id`` (the EOS itself is emitted, then the slot
+    stops — a slot finishing mid-verify gets its out_len cut at the
+    EOS position so harvest/prefix-insertion never see post-EOS
+    tokens).  Emitted tokens are always the model's own argmax chain
+    ``preds[:, :n_emit]`` — drafts only decide how many rows of it are
+    usable — hence bit-parity with the K=0 span loop.
+
+    Returns (cache, table, cur_tok', out_buf', pos', out_len',
+    active', n_emit) with n_emit zeroed for inactive slots; the host
+    mirrors bookkeeping from n_emit/active' and rolls each slot's
+    block-table frontier back to pos'.
+    """
+    B, K1 = cur_tok.shape[0], table.shape[1] + 1
+    K = K1 - 1
+    T = out_buf.shape[1]
+    row = jnp.arange(B)
+    iota = jnp.arange(K1, dtype=jnp.int32)
+    cap = max_len - 1
+
+    drafts = propose(table, cur_tok, out_buf, out_len)        # [B, K]
+    window = jnp.concatenate([cur_tok[:, None], drafts], axis=1)
+    preds, cache = api.verify_step(cfg, params, cache, window, pos,
+                                   block_table)               # [B, K+1]
+
+    n_acc = accept_greedy(drafts, preds)
+    budget = jnp.maximum(
+        jnp.minimum(max_new - out_len, cap - pos), 0)
+    n_emit = jnp.minimum(n_acc + 1, budget)
+    eos_stop = jnp.zeros((B,), bool)
+    if eos_id is not None:
+        eos_j = jnp.min(jnp.where(preds == eos_id, iota[None, :], K1),
+                        axis=1)
+        n_emit = jnp.minimum(n_emit, eos_j + 1)
+        eos_stop = eos_j < n_emit
+    n_emit = jnp.where(active, n_emit, 0)
+
+    # scatter the emitted window preds[:, :n_emit] into the output
+    # buffer; masked rows target an out-of-range index and drop
+    idx = out_len[:, None] + iota[None, :]
+    ok = active[:, None] & (iota[None, :] < n_emit[:, None])
+    flat = jnp.where(ok, row[:, None] * T + idx, B * T)
+    out_buf = (out_buf.reshape(-1)
+               .at[flat.reshape(-1)].set(preds.reshape(-1), mode="drop")
+               .reshape(B, T))
+
+    out_len = out_len + n_emit
+    pos = pos + n_emit
+    last = jnp.take_along_axis(
+        preds, jnp.clip(n_emit - 1, 0, K)[:, None], axis=1)[:, 0]
+    cur_tok = jnp.where(n_emit > 0, last, cur_tok)
+    active = (active & (out_len < max_new) & (pos < cap) & ~eos_stop)
+    table = update_ngram(table, out_buf, out_len, n_emit > 0)
+    return cache, table, cur_tok, out_buf, pos, out_len, active, n_emit

@@ -119,6 +119,37 @@ def test_lru_eviction_order():
     tree.check_invariants()
 
 
+def test_per_block_lru_evicts_hot_nodes_cold_tail_first():
+    """LRU stamps are per block, not per node: a lookup that matched
+    only the head of an edge must leave the edge's tail colder than a
+    later-inserted leaf, so eviction takes the hot node's cold tail
+    BEFORE the warmer leaf (node-granular stamps would have pinned the
+    whole hot edge and evicted the leaf first)."""
+    pool, tree = _tree()
+    rng = np.random.default_rng(5)
+    a, b = _run(rng, 3), _run(rng, 1)
+    blocks_a = [pool.alloc() for _ in range(3)]
+    blocks_b = [pool.alloc()]
+    tree.insert(a, blocks_a)                 # t1: a[0..2]
+    tree.insert(b, blocks_b)                 # t2: b[0] (warmer than a's)
+    for blk in blocks_a + blocks_b:
+        pool.decref(blk)
+    full, _, _ = tree.match(a[:BS])          # t3: bumps ONLY a's head
+    assert full == blocks_a[:1]
+    assert tree.evict(1) == 1                # coldest: a's tail (t1)
+    assert not pool.cached[blocks_a[2]]
+    assert pool.cached[blocks_b[0]], "warmer leaf evicted before cold tail"
+    assert tree.evict(1) == 1                # next coldest: a[1] (t1)
+    assert not pool.cached[blocks_a[1]]
+    assert pool.cached[blocks_b[0]]
+    assert tree.evict(1) == 1                # then the leaf (t2) ...
+    assert not pool.cached[blocks_b[0]]
+    assert pool.cached[blocks_a[0]], "hot head outlives everything"
+    full, _, _ = tree.match(a)               # surviving prefix served
+    assert full == blocks_a[:1]
+    tree.check_invariants()
+
+
 def test_eviction_skips_refcounted_blocks():
     pool, tree = _tree()
     rng = np.random.default_rng(4)
