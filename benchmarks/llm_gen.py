@@ -32,6 +32,15 @@ acceptance rate, accepted-tokens-per-step (the span loop's is 1.0 by
 construction), and greedy-output parity (exact acceptance — outputs
 must be bit-identical, asserted by CI on the uploaded snapshot).
 
+A fourth, tensor-parallel protocol A/Bs ``tp=1`` vs ``tp=2/4`` on the
+ShareGPT mix (paged + prefix cache on) when the host exposes enough
+devices (CI forces 8 CPU devices via XLA_FLAGS): weights shard
+head-wise/column-row-wise and the KV pool along its KV-head axis
+(sharding/plans.ServingPlan), and the order-deterministic grouped
+reductions make greedy outputs token-identical to tp=1 — asserted by
+CI on the uploaded snapshot's ``tp`` section, together with O(1)
+compile counts and the per-device KV-byte shrink.
+
 Also reports the prefill/decode wall-time split, the compiled-program
 counts, greedy-output parity, and the paged pool's utilization
 (peak blocks in use / pool size, KV token capacity vs the contiguous
@@ -235,6 +244,67 @@ def llm_generation():
         rows.append(Timing(
             f"measured(cpu)/spec-output-parity/{dtype_name}",
             0.0, 0, 1, derived=spec_parity, derived_name="bool"))
+        # tensor-parallel A/B: the same scheduler + paged pool + prefix
+        # cache over a tp mesh (weights head-wise/column-row, KV pool
+        # along the KV-head axis; sharding/plans.ServingPlan).  Greedy
+        # outputs must be token-identical to tp=1 — the order-
+        # deterministic grouped reductions make the comparison exact —
+        # and the per-device KV bytes shrink by the TP degree.  Runs on
+        # the float32 pass when the host exposes enough devices
+        # (CI: XLA_FLAGS=--xla_force_host_platform_device_count=8);
+        # single-device runs record a skipped marker instead.
+        ndev = jax.device_count()
+        tp_degrees = [t for t in (2, 4)
+                      if t <= ndev and cfg.num_kv_heads % t == 0]
+        if dtype_name != "float32":
+            tp_sec = {"skipped": True, "devices": float(ndev),
+                      "reason": "tp A/B measured on the float32 pass"}
+        elif not tp_degrees:
+            tp_sec = {"skipped": True, "devices": float(ndev),
+                      "reason": "needs a multi-device host (XLA_FLAGS="
+                                "--xla_force_host_platform_device_"
+                                "count=8)"}
+        else:
+            tp_kw = dict(batch_slots=4, max_len=96, chunk=16, span=8,
+                         paged=True, block_size=16, prefix_cache=True)
+            ref_srv = ChunkedServer(cfg, params, **tp_kw)
+            ref_srv.serve(clone_requests(base_reqs))   # compile warmup
+            ref_run = clone_requests(base_reqs)
+            ref_stats = ref_srv.serve(ref_run)
+            degrees: Dict[str, Dict[str, float]] = {}
+            tp_parity = True
+            for t in tp_degrees:
+                tsrv = ChunkedServer(cfg, params, tp=t, **tp_kw)
+                tsrv.serve(clone_requests(base_reqs))  # compile warmup
+                trun = clone_requests(base_reqs)
+                tstats = tsrv.serve(trun)
+                tp_parity &= all(a.output == b.output
+                                 for a, b in zip(ref_run, trun))
+                degrees[str(t)] = {
+                    "tokens_per_s": tstats["tokens_per_s"],
+                    "speedup_vs_tp1": (
+                        tstats["tokens_per_s"] / ref_stats["tokens_per_s"]
+                        if ref_stats["tokens_per_s"] > 0 else 0.0),
+                    "pool_utilization": tstats["pool_utilization"],
+                    "kv_bytes_per_device": tstats["kv_bytes_per_device"],
+                    "compiled_programs": tstats["compiled_programs"],
+                }
+                rows.append(Timing(
+                    f"measured(cpu)/tp{t}-server/{dtype_name}",
+                    0.0, 0, 1, derived=tstats["tokens_per_s"],
+                    derived_name="tokens_per_s"))
+            tp_sec = {
+                "devices": float(ndev),
+                "tp1_tokens_per_s": ref_stats["tokens_per_s"],
+                "tp1_kv_bytes_per_device":
+                    ref_stats["kv_bytes_per_device"],
+                "degrees": degrees,
+                "outputs_identical": bool(tp_parity),
+            }
+            rows.append(Timing(
+                f"measured(cpu)/tp-output-parity/{dtype_name}",
+                0.0, 0, 1, derived=float(tp_parity),
+                derived_name="bool"))
         SERVING_RESULTS[dtype_name] = {
             "slot_tokens_per_s": slot_stats["tokens_per_s"],
             "chunked_tokens_per_s": stats["tokens_per_s"],
@@ -290,6 +360,7 @@ def llm_generation():
                     spec_srv.compile_counts()["verify_step"],
                 "outputs_identical": bool(spec_parity),
             },
+            "tp": tp_sec,
         }
     # paper reference points (H800, llama-2-7B)
     for name, tps in (("paper/H800/llama2-7B/fp32", 568.91),

@@ -30,6 +30,21 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return _make_mesh(shape, axes)
 
 
+def make_tp_mesh(tp: int, axis: str = "tp") -> Mesh:
+    """1-axis tensor-parallel serving mesh over the first `tp` devices
+    (sharding/plans.ServingPlan documents the axis contract).  On a CPU
+    host, fan devices out first: ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N`` before any jax initialization."""
+    import numpy as np
+    devs = jax.devices()
+    if tp < 1 or tp > len(devs):
+        raise ValueError(
+            f"tp={tp} needs {tp} devices but only {len(devs)} are "
+            f"visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={max(tp, 1)}")
+    return Mesh(np.asarray(devs[:tp]), (axis,))
+
+
 def make_host_mesh(shape: Tuple[int, ...] = None,
                    axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
     """Small CPU mesh from whatever devices exist (tests/examples)."""

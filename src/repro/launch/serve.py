@@ -10,7 +10,13 @@ tails) and prints the radix prefix cache's hit-rate stats; disable the
 cache with ``--no-prefix-cache`` for an A/B run.  ``--spec-decode K``
 turns on speculative decoding (n-gram drafts + one-dispatch verify,
 bit-identical outputs); pair it with ``--workload repetitive`` to see
-the accepted-tokens-per-step climb above 1.
+the accepted-tokens-per-step climb above 1.  ``--tp N`` serves
+tensor-parallel over an N-device mesh (weights head-wise/column-row,
+KV pool along the KV-head axis; token-identical outputs) and prints
+the per-device sharding stats:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve --tp 4
 """
 
 from __future__ import annotations
@@ -67,6 +73,15 @@ def main() -> None:
                          "bit-identical to K=0, only the number of "
                          "model dispatches per token changes.  "
                          "Default 0 = off (plain decode spans)")
+    ap.add_argument("--tp", type=int, default=1, metavar="N",
+                    help="tensor-parallel degree (chunked engine): "
+                         "shard the weights head-wise/column-row-wise "
+                         "and the paged KV pool along its KV-head axis "
+                         "over an N-device mesh "
+                         "(sharding/plans.ServingPlan); greedy outputs "
+                         "are token-identical to tp=1.  On CPU fan "
+                         "devices out first: XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=N")
     ap.add_argument("--workload", default="sharegpt",
                     choices=("sharegpt", "sysprompt", "repetitive"),
                     help="sharegpt: log-normal independent prompts; "
@@ -98,13 +113,36 @@ def main() -> None:
                             num_blocks=args.pool_blocks,
                             prefix_cache=not args.no_prefix_cache,
                             eos_id=args.eos_id,
-                            spec_decode=args.spec_decode)
+                            spec_decode=args.spec_decode,
+                            tp=args.tp)
     else:
         if args.spec_decode:
             raise SystemExit("--spec-decode needs the chunked engine "
                              "(the slot baseline has no verify path)")
+        if args.tp > 1:
+            raise SystemExit("--tp needs the chunked engine (the slot "
+                             "baseline is single-device)")
         srv = SlotServer(cfg, params, batch_slots=args.slots,
                          max_len=max_len, eos_id=args.eos_id)
+    if args.tp > 1:
+        import jax.tree_util as jtu
+        param_bytes = sum(x.nbytes for x in jtu.tree_leaves(srv.params))
+        kv_bytes = sum(x.nbytes for x in jtu.tree_leaves(srv.cache))
+        leaves = jtu.tree_leaves(srv.params)
+        sharded = sum(1 for x in leaves
+                      if not x.sharding.is_fully_replicated)
+        per_dev = sum(x.nbytes if x.sharding.is_fully_replicated
+                      else x.nbytes // srv.tp for x in leaves)
+        print(f"  tp-mesh: {srv.tp} devices on axis "
+              f"'{srv.mesh.axis_names[0]}' "
+              f"({[str(d) for d in srv.mesh.devices.ravel()]})")
+        print(f"  sharding: {sharded}/{len(leaves)} param tensors "
+              f"sharded, {param_bytes / 1e6:.2f} MB params -> "
+              f"{per_dev / 1e6:.2f} MB/device, "
+              f"KV pool {kv_bytes / 1e6:.2f} MB -> "
+              f"{kv_bytes // srv.tp / 1e6:.2f} MB/device "
+              f"(KV-head axis {cfg.num_kv_heads} -> "
+              f"{cfg.num_kv_heads // srv.tp}/device)")
     if args.workload == "repetitive":
         reqs = repetitive_requests(args.requests, cfg.vocab_size,
                                    num_motifs=args.templates,

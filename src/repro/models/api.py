@@ -70,15 +70,17 @@ def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16, *, paged: bool = False,
                block_size: int = 16,
-               num_blocks: Optional[int] = None) -> Params:
+               num_blocks: Optional[int] = None,
+               sharding=None) -> Params:
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.init_cache(cfg, batch, max_len, dtype,
                                       paged=paged, block_size=block_size,
-                                      num_blocks=num_blocks)
-    if paged:
+                                      num_blocks=num_blocks,
+                                      sharding=sharding)
+    if paged or sharding is not None:
         raise NotImplementedError(
-            f"paged KV cache is transformer-only for now (family "
-            f"{cfg.family})")
+            f"paged/sharded KV cache is transformer-only for now "
+            f"(family {cfg.family})")
     if cfg.family == "ssm":
         return ssm_lm.init_cache(cfg, batch, max_len, dtype)
     if cfg.family == "hybrid":

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models.common import ParamSpec, apply_rope
+from repro.models.common import ParamSpec, apply_rope, fixed_tree_sum
 from repro.sharding.axes import constrain
 
 NEG_INF = -1e30
@@ -58,8 +58,28 @@ def qkv_project(cfg, p, x: jax.Array
     return q, k, v
 
 
-def out_project(p, o: jax.Array) -> jax.Array:
-    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+def out_project(p, o: jax.Array, *, groups: int = 0) -> jax.Array:
+    """o [B,S,H,hd] -> [B,S,d] through the row-parallel wo.
+
+    With ``groups > 1`` (serving: transformer.serving_det_groups) the
+    head contraction is restructured as `groups` partial einsums in
+    fp32 reduced by ``common.fixed_tree_sum`` — an addition order fixed
+    by the group count alone, so a tensor-parallel mesh sharding the
+    head axis over any tp dividing `groups` yields bitwise-identical
+    outputs to tp=1 (a plain einsum would psum per-device partials in
+    a layout-dependent order).  ``groups=0`` keeps the single-einsum
+    training path.
+    """
+    wo = p["wo"].astype(o.dtype)
+    if groups > 1:
+        B, S, H, hd = o.shape
+        og = o.reshape(B, S, groups, H // groups, hd)
+        wg = wo.reshape(groups, H // groups, hd, wo.shape[-1])
+        parts = jnp.einsum("bsghk,ghkd->gbsd", og, wg,
+                           preferred_element_type=jnp.float32)
+        y = fixed_tree_sum(parts).astype(o.dtype)
+    else:
+        y = jnp.einsum("bshk,hkd->bsd", o, wo)
     return constrain(y, ("batch", "seq", "embed"))
 
 

@@ -7,7 +7,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ParamSpec, activation
+from repro.models.common import ParamSpec, activation, fixed_tree_sum
 from repro.sharding.axes import constrain
 
 
@@ -27,8 +27,15 @@ def mlp_specs(cfg, d_model: Optional[int] = None,
     return specs
 
 
-def mlp(cfg, p, x: jax.Array) -> jax.Array:
-    """x: [..., d] -> [..., d]."""
+def mlp(cfg, p, x: jax.Array, *, groups: int = 0) -> jax.Array:
+    """x: [..., d] -> [..., d].
+
+    ``groups > 1`` (serving, [B,S,d] inputs only) restructures the
+    row-parallel w_down contraction as per-group fp32 partials reduced
+    by a fixed halving tree — the same order-deterministic reduction as
+    attention.out_project, so tensor-parallel sharding of the hidden
+    dim over any tp dividing `groups` is bitwise-identical to tp=1.
+    """
     dt = x.dtype
     up = x @ p["w_up"].astype(dt)
     if cfg.use_bias:
@@ -36,7 +43,15 @@ def mlp(cfg, p, x: jax.Array) -> jax.Array:
     gate = x @ p["w_gate"].astype(dt) if "w_gate" in p else None
     h = activation(cfg, up, gate)
     h = constrain(h, ("batch", None, "mlp"))
-    y = h @ p["w_down"].astype(dt)
+    if groups > 1 and h.ndim == 3:
+        B, S, f = h.shape
+        hg = h.reshape(B, S, groups, f // groups)
+        wg = p["w_down"].astype(dt).reshape(groups, f // groups, -1)
+        parts = jnp.einsum("bsgf,gfd->gbsd", hg, wg,
+                           preferred_element_type=jnp.float32)
+        y = fixed_tree_sum(parts).astype(dt)
+    else:
+        y = h @ p["w_down"].astype(dt)
     if cfg.use_bias:
         y = y + p["b_down"].astype(dt)
     return constrain(y, ("batch", "seq", "embed"))

@@ -174,26 +174,51 @@ def loss_fn(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
 # serving: prefill + single-token decode over a KV cache
 # ----------------------------------------------------------------------
 
+def serving_det_groups(cfg) -> Tuple[int, int]:
+    """(attention, mlp) group counts for the order-deterministic
+    grouped reductions of the serving forward (out_project / mlp with
+    ``groups=``): the largest power of two ≤ 16 dividing the head count
+    / hidden width.  Any tensor-parallel degree dividing these groups
+    produces bitwise-identical serving outputs to tp=1, because the
+    only cross-shard float reductions run through
+    ``common.fixed_tree_sum`` whose addition order is fixed by the
+    group count alone."""
+    def pow2_div(n: int, cap: int = 16) -> int:
+        g = 1
+        while g < cap and n % (g * 2) == 0:
+            g *= 2
+        return g
+    return pow2_div(cfg.num_heads), pow2_div(cfg.d_ff)
+
+
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
                paged: bool = False, block_size: int = 16,
-               num_blocks: Optional[int] = None) -> Params:
+               num_blocks: Optional[int] = None,
+               sharding=None) -> Params:
     """Contiguous cache [L, B, T, KH, hd] or, with ``paged=True``, a
     shared block pool [L, num_blocks, block_size, KH, hd] addressed
     through a per-slot block table (see attention.gather_paged_cache).
     The paged default pool matches the contiguous capacity
     (batch * ceil(max_len / block_size) blocks); servers pass a smaller
-    pool to actually share memory across slots."""
+    pool to actually share memory across slots.  ``sharding`` (a
+    NamedSharding; sharding/plans.ServingPlan.cache_sharding) lays the
+    k/v leaves out over a serving mesh at init — the KV-head dim sits
+    at index 3 of both layouts — instead of on the default device."""
     L = cfg.num_layers
     KH, hd = cfg.num_kv_heads, cfg.head_dim
     if paged:
         if num_blocks is None:
             num_blocks = batch * -(-max_len // block_size)
-        return attn.init_paged_kv_cache(num_blocks, block_size, KH, hd,
-                                        layers=L, dtype=dtype)
-    return {
-        "k": jnp.zeros((L, batch, max_len, KH, hd), dtype),
-        "v": jnp.zeros((L, batch, max_len, KH, hd), dtype),
-    }
+        cache = attn.init_paged_kv_cache(num_blocks, block_size, KH, hd,
+                                         layers=L, dtype=dtype)
+    else:
+        cache = {
+            "k": jnp.zeros((L, batch, max_len, KH, hd), dtype),
+            "v": jnp.zeros((L, batch, max_len, KH, hd), dtype),
+        }
+    if sharding is not None:
+        cache = jax.device_put(cache, sharding)
+    return cache
 
 
 def decode_step(cfg, params, cache: Params, token: jax.Array,
@@ -209,6 +234,7 @@ def decode_step(cfg, params, cache: Params, token: jax.Array,
     layout.
     """
     B = token.shape[0]
+    ga, gm = serving_det_groups(cfg)
     x = params["embed"].astype(jnp.bfloat16)[token][:, None, :]  # [B,1,d]
     x = constrain(x, ("batch", None, "embed"))
     pos = jnp.asarray(pos)
@@ -229,12 +255,12 @@ def decode_step(cfg, params, cache: Params, token: jax.Array,
                                              block_table)
             kg, vg = attn.gather_paged_cache(ck, cv, block_table)
         o = attn.decode_attention(q, kg, vg, pos + 1)
-        x = x + attn.out_project(lp["attn"], o)
+        x = x + attn.out_project(lp["attn"], o, groups=ga)
         h = apply_norm(cfg, x, lp["ln2"])
         if cfg.family == "moe":
             y, _ = moe_mod.moe_mlp(cfg, lp["moe"], h)
         else:
-            y = mlp_mod.mlp(cfg, lp["mlp"], h)
+            y = mlp_mod.mlp(cfg, lp["mlp"], h, groups=gm)
         return x + y, (ck, cv)
 
     x, (new_k, new_v) = lax.scan(
@@ -252,6 +278,7 @@ def _chunk_fwd(cfg, params, cache: Params, tokens: jax.Array,
     reads out the last valid row) and `verify_step` (which reads out
     every row).  Returns (final hidden [B, C, d], cache)."""
     B, C = tokens.shape
+    ga, gm = serving_det_groups(cfg)
     x = params["embed"].astype(jnp.bfloat16)[tokens]          # [B,C,d]
     x = constrain(x, ("batch", None, "embed"))
     positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
@@ -270,12 +297,12 @@ def _chunk_fwd(cfg, params, cache: Params, tokens: jax.Array,
                                              block_table)
             kg, vg = attn.gather_paged_cache(ck, cv, block_table)
         o = attn.chunk_attention(q, kg, vg, positions)
-        x = x + attn.out_project(lp["attn"], o)
+        x = x + attn.out_project(lp["attn"], o, groups=ga)
         h = apply_norm(cfg, x, lp["ln2"])
         if cfg.family == "moe":
             y, _ = moe_mod.moe_mlp(cfg, lp["moe"], h)
         else:
-            y = mlp_mod.mlp(cfg, lp["mlp"], h)
+            y = mlp_mod.mlp(cfg, lp["mlp"], h, groups=gm)
         return x + y, (ck, cv)
 
     x, (new_k, new_v) = lax.scan(

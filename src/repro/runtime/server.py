@@ -61,6 +61,19 @@ rejected suffix's cache writes are rolled back host-side by
 truncating the slot's block-table frontier.  One extra compiled
 program total: {chunk_step, decode_span, verify_step}.
 
+``tp=N`` (default 1) serves **tensor-parallel** over an N-device mesh
+(launch/mesh.make_tp_mesh; sharding/plans.ServingPlan documents the
+mesh/axis contract): weights shard head-wise / column-row-wise, the KV
+pool shards along its KV-head dim, and the three jitted work units run
+as single fixed-shape programs over NamedSharding operands — compile
+counts stay {chunk_step, decode_span, verify_step}.  Block tables, the
+refcounted allocator and the radix tree stay host-side and replicated,
+so paging, prefix caching and spec decode compose with TP unchanged.
+The only cross-shard float reductions (attention out-projection, MLP
+down-projection) run through order-deterministic fixed-tree grouped
+sums (models.transformer.serving_det_groups), so greedy outputs at any
+supported ``tp`` are token-identical to ``tp=1``.
+
 ``SlotServer`` — the original engine, kept as the measured baseline:
 prefill feeds one token per ``decode_step`` through a scan and
 recompiles per distinct prompt length; the decode loop syncs to the
@@ -76,6 +89,7 @@ coming back short.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -86,9 +100,12 @@ import numpy as np
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_tp_mesh
 from repro.models import api, transformer
 from repro.runtime import spec_decode as spec
 from repro.runtime.prefix_cache import BlockPool, RadixPrefixCache
+from repro.sharding import axes as axes_mod
+from repro.sharding import plans as plans_mod
 
 Params = Any
 
@@ -223,16 +240,50 @@ class ChunkedServer:
                  prefix_cache: bool = True,
                  eos_id: Optional[int] = None,
                  spec_decode: int = 0,
-                 spec_n_ctx: int = spec.DEFAULT_N_CTX):
+                 spec_n_ctx: int = spec.DEFAULT_N_CTX,
+                 tp: int = 1, mesh=None):
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
-        self.params = params
         self.B = batch_slots
         self.max_len = max_len
         self.chunk = chunk
         self.span = span
         self.paged = paged
         self.eos_id = eos_id
+        # -- tensor-parallel mesh (sharding/plans.ServingPlan contract):
+        # weights head-wise/column-row-wise, KV cache along the KV-head
+        # axis, every scheduler operand (tokens, positions, block
+        # tables, out_buf, n-gram table) replicated — the host-side
+        # allocator/radix tree never learn the mesh exists, so paging,
+        # prefix sharing and spec decode compose with TP unchanged.
+        self.mesh = mesh
+        if self.mesh is None and tp > 1:
+            self.mesh = make_tp_mesh(tp)
+        self._plan = None
+        self.tp = 1
+        if self.mesh is not None:
+            assert len(self.mesh.axis_names) == 1, \
+                "serving mesh must have exactly one (tensor-parallel) axis"
+            self._plan = plans_mod.serving_plan(
+                self.mesh, axis=self.mesh.axis_names[0])
+            self.tp = self._plan.tp
+        if self.tp > 1:
+            assert cfg.family != "moe", \
+                "tensor-parallel serving is dense/vlm-only for now"
+            assert cfg.num_kv_heads % self.tp == 0, \
+                (f"tp={self.tp} must divide num_kv_heads="
+                 f"{cfg.num_kv_heads} (the KV pool shards head-wise)")
+            ga, gm = transformer.serving_det_groups(cfg)
+            assert ga % self.tp == 0 and gm % self.tp == 0, \
+                (f"tp={self.tp} must divide the deterministic reduction "
+                 f"groups (attn={ga}, mlp={gm}) for exact tp-vs-1 "
+                 f"output parity")
+        if self._plan is not None:
+            self._param_sh = self._plan.param_shardings(cfg)
+            self._cache_sh = self._plan.cache_sharding(cfg)
+            self._repl = self._plan.replicated
+            params = jax.device_put(params, self._param_sh)
+        self.params = params
         self.spec_decode = int(spec_decode)
         assert self.spec_decode >= 0
         if self.spec_decode and not paged:
@@ -250,7 +301,9 @@ class ChunkedServer:
                                if num_blocks is None else num_blocks)
             self.cache = api.init_cache(
                 cfg, batch_slots, max_len, paged=True,
-                block_size=block_size, num_blocks=self.num_blocks)
+                block_size=block_size, num_blocks=self.num_blocks,
+                sharding=(self._cache_sh if self._plan is not None
+                          else None))
             self.block_table = np.full((batch_slots, self.max_blocks),
                                        -1, np.int32)
             self.pool = BlockPool(self.num_blocks)
@@ -271,13 +324,22 @@ class ChunkedServer:
             self._cow_fn = jax.jit(
                 lambda cache, src, dst: api.cow_copy_block(cfg, cache,
                                                            src, dst),
-                donate_argnums=(0,))
+                donate_argnums=(0,),
+                **self._sharding_kw(n_ops=2, with_params=False))
         else:
             # + chunk headroom: chunk writes start at the valid frontier
             # and must never clamp (see attention.update_cache)
-            self.cache = api.init_cache(cfg, batch_slots, max_len + chunk)
+            self.cache = api.init_cache(
+                cfg, batch_slots, max_len + chunk,
+                sharding=(self._cache_sh if self._plan is not None
+                          else None))
         self.cur_tok = jnp.zeros((batch_slots,), jnp.int32)
         self.out_buf = jnp.zeros((batch_slots, max_len), jnp.int32)
+        if self._plan is not None:
+            # device-resident replicated state (tokens only cross to
+            # the host at harvest, same as the single-device engine)
+            self.cur_tok = jax.device_put(self.cur_tok, self._repl)
+            self.out_buf = jax.device_put(self.out_buf, self._repl)
         # host-owned mirror (deterministic; never read back from device
         # unless eos stopping is on)
         self.pos = np.zeros(batch_slots, np.int32)
@@ -285,17 +347,51 @@ class ChunkedServer:
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.mode = ["idle"] * batch_slots    # idle | prefill | decode | done
         self.prompt_off = np.zeros(batch_slots, np.int32)
-        self._chunk_fn = jax.jit(self._chunk_impl)
-        self._span_fn = jax.jit(self._span_impl)
+        self._chunk_fn = jax.jit(self._chunk_impl,
+                                 **self._sharding_kw(n_ops=9, n_out=2))
+        self._span_fn = jax.jit(self._span_impl,
+                                **self._sharding_kw(n_ops=7, n_out=5))
         if self.spec_decode:
             self.ngram_table = spec.init_ngram_table(
                 self.spec_decode, spec_n_ctx)
-            self._verify_fn = jax.jit(self._spec_impl)
+            if self._plan is not None:
+                self.ngram_table = jax.device_put(self.ngram_table,
+                                                  self._repl)
+            self._verify_fn = jax.jit(self._spec_impl,
+                                      **self._sharding_kw(n_ops=8,
+                                                          n_out=7))
             self.spec_steps = 0
             self.spec_slot_steps = 0
             self.spec_drafted = 0
             self.spec_accepted = 0
             self.spec_emitted = 0
+
+    def _sharding_kw(self, *, n_ops: int, n_out: Optional[int] = None,
+                     with_params: bool = True) -> Dict[str, Any]:
+        """jit kwargs for a serving work unit under the TP mesh:
+        in_shardings = (params tree, cache, then `n_ops` replicated
+        operands); out_shardings = (cache, then `n_out` replicated
+        results) — pinning the outputs keeps the carried state's
+        sharding identical across calls, so each work unit compiles
+        exactly once (an unpinned GSPMD output choice would retrace the
+        second call).  ``n_out=None`` marks a bare-cache result (the
+        COW copy).  Empty (plain single-device jit) with no mesh."""
+        if self._plan is None:
+            return {}
+        lead = (self._param_sh,) if with_params else ()
+        out = (self._cache_sh if n_out is None
+               else (self._cache_sh,) + (self._repl,) * n_out)
+        return {"in_shardings": lead + (self._cache_sh,)
+                + (self._repl,) * n_ops,
+                "out_shardings": out}
+
+    def _trace_ctx(self):
+        """Activation-sharding rules (ServingPlan.act_rules) applied at
+        jit trace time so `constrain` calls inside the model bodies
+        keep heads/kv_heads/mlp/vocab activations on the tp axis."""
+        if self._plan is None:
+            return contextlib.nullcontext()
+        return axes_mod.use_rules(self.mesh, self._plan.act_rules)
 
     def _device_block_table(self) -> np.ndarray:
         """Snapshot of the block table as a jit operand (fixed shape;
@@ -307,22 +403,29 @@ class ChunkedServer:
     # -- jitted work units ------------------------------------------------
     def _chunk_impl(self, params, cache, cur_tok, out_buf, tokens_host,
                     pos, n_tokens, is_decode, emit, out_len, block_table):
-        B, C = tokens_host.shape
-        col0 = jnp.arange(C, dtype=jnp.int32) == 0
-        tokens = jnp.where(is_decode[:, None] & col0[None, :],
-                           cur_tok[:, None], tokens_host)
-        logits, cache = transformer.chunk_step(
-            self.cfg, params, cache, tokens, pos, n_tokens,
-            block_table if self.paged else None)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        cur_tok = jnp.where(emit, nxt, cur_tok)
-        row = jnp.arange(B)
-        idx = jnp.clip(out_len, 0, out_buf.shape[1] - 1)
-        out_buf = out_buf.at[row, idx].set(
-            jnp.where(emit, nxt, out_buf[row, idx]))
-        return cache, cur_tok, out_buf
+        with self._trace_ctx():
+            B, C = tokens_host.shape
+            col0 = jnp.arange(C, dtype=jnp.int32) == 0
+            tokens = jnp.where(is_decode[:, None] & col0[None, :],
+                               cur_tok[:, None], tokens_host)
+            logits, cache = transformer.chunk_step(
+                self.cfg, params, cache, tokens, pos, n_tokens,
+                block_table if self.paged else None)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            cur_tok = jnp.where(emit, nxt, cur_tok)
+            row = jnp.arange(B)
+            idx = jnp.clip(out_len, 0, out_buf.shape[1] - 1)
+            out_buf = out_buf.at[row, idx].set(
+                jnp.where(emit, nxt, out_buf[row, idx]))
+            return cache, cur_tok, out_buf
 
     def _span_impl(self, params, cache, cur_tok, out_buf, pos, out_len,
+                   active, max_new, block_table):
+        with self._trace_ctx():
+            return self._span_body(params, cache, cur_tok, out_buf, pos,
+                                   out_len, active, max_new, block_table)
+
+    def _span_body(self, params, cache, cur_tok, out_buf, pos, out_len,
                    active, max_new, block_table):
         row = jnp.arange(self.B)
         cap = self.max_len - 1
@@ -354,11 +457,12 @@ class ChunkedServer:
 
     def _spec_impl(self, params, cache, table, cur_tok, out_buf, pos,
                    out_len, active, max_new, block_table):
-        return spec.spec_decode_step(
-            self.cfg, params, cache, table, cur_tok, out_buf, pos,
-            out_len, active, max_new,
-            block_table if self.paged else None,
-            max_len=self.max_len, eos_id=self.eos_id)
+        with self._trace_ctx():
+            return spec.spec_decode_step(
+                self.cfg, params, cache, table, cur_tok, out_buf, pos,
+                out_len, active, max_new,
+                block_table if self.paged else None,
+                max_len=self.max_len, eos_id=self.eos_id)
 
     def compile_counts(self) -> Dict[str, int]:
         """Programs compiled per work unit — O(1) by construction."""
@@ -845,6 +949,7 @@ class ChunkedServer:
             "decode_spans": float(spans),
             "compiled_programs": float(sum(max(v, 0)
                                            for v in compiles.values())),
+            "tp": float(self.tp),
         }
         if self.spec_decode:
             stats.update({
@@ -863,6 +968,8 @@ class ChunkedServer:
             })
         if self.paged:
             contiguous_tokens = self.B * (self.max_len + self.chunk)
+            kv_bytes = sum(int(leaf.nbytes) for leaf in
+                           jax.tree_util.tree_leaves(self.cache))
             stats.update({
                 "pool_blocks": float(self.num_blocks),
                 "block_size": float(self.block_size),
@@ -873,6 +980,9 @@ class ChunkedServer:
                                             * self.block_size),
                 "kv_tokens_contiguous": float(contiguous_tokens),
                 "admission_stalls": float(self.admission_stalls),
+                # the pool shards its KV-head dim over the tp mesh, so
+                # every device holds all blocks but only KH/tp heads
+                "kv_bytes_per_device": float(kv_bytes // self.tp),
             })
             if self.prefix_cache is not None:
                 total = self.total_prompt_tokens

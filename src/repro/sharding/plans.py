@@ -12,6 +12,13 @@ Plans:
   tp        tensor parallel over `model`, DP over `data`
   fsdp_tp   2D: ZeRO-3 over `data` x TP over `model`   (default)
   fsdp_tp_sp  + sequence-parallel long-context decode (KV over `data`)
+
+Serving has its own plan shape (``serving_plan`` / ``ServingPlan``
+below): a 1-axis tensor-parallel mesh over which the transformer
+weights shard head-wise / column-row-wise and the KV cache shards along
+the KV-head dimension, while every scheduler-owned operand stays
+replicated.  See the ServingPlan docstring for the full mesh/axis
+contract.
 """
 
 from __future__ import annotations
@@ -19,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple, Union
 
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Axis = Union[None, str, Tuple[str, ...]]
 
@@ -115,6 +122,102 @@ def default_plan(cfg, shape, *, multi_pod: bool = False) -> Plan:
     if shape.kind == "decode" and shape.global_batch < 16:
         return get_plan("fsdp_tp_sp", multi_pod=multi_pod)
     return get_plan("fsdp_tp", multi_pod=multi_pod)
+
+
+# ----------------------------------------------------------------------
+# serving: tensor-parallel plan over a 1-axis device mesh
+# ----------------------------------------------------------------------
+
+SERVING_TP_AXIS = "tp"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingPlan:
+    """Tensor-parallel serving contract over a 1-axis ``tp`` mesh.
+
+    Mesh/axis contract (runtime/server.py, launch/mesh.make_tp_mesh):
+
+      * The mesh has exactly one axis (default name ``"tp"``) of size
+        ``tp`` — the tensor-parallel degree.  Serving never shards the
+        slot/batch axis: block tables, the refcounted allocator and the
+        radix prefix tree are host-side numpy structures replicated in
+        meaning across devices, so paging, prefix sharing and
+        speculative decoding compose with TP unchanged.
+      * Weights shard Megatron-style through ``param_rules``: qkv and
+        the MLP up/gate projections column-parallel (logical axes
+        ``heads`` / ``kv_heads`` / ``mlp`` carry ``tp``), the attention
+        out-projection and MLP down-projection row-parallel (their
+        leading ``heads`` / ``mlp`` dim carries ``tp``), and the
+        embedding/unembedding over ``vocab``.  Logical dims that do not
+        divide the mesh fall back to replicated
+        (models/common.partition_specs).
+      * The KV cache — paged pool ``[L, num_blocks, block_size, KH,
+        hd]`` or contiguous ``[L, B, T, KH, hd]`` — shards its KV-head
+        dim (index 3 in both layouts) over ``tp``; each device holds
+        every pool block but only ``KH / tp`` heads of it, so the
+        per-device KV bytes shrink by the TP degree while the host
+        allocator keeps addressing whole logical blocks.  Requires
+        ``KH % tp == 0`` (the server asserts).
+      * Every other jit operand (tokens, positions, block tables,
+        output buffer, n-gram table) is replicated: ``replicated``.
+      * Activations inside the jitted steps follow ``act_rules``
+        (heads/kv_heads/mlp/vocab over ``tp``; batch/seq/embed
+        replicated), applied via sharding.axes.use_rules at trace time.
+
+    Cross-shard float reductions (attention out-projection, MLP
+    down-projection) are made order-deterministic by the grouped
+    fixed-tree sums in models/{attention,mlp}.py
+    (models.transformer.serving_det_groups), so greedy outputs at any
+    ``tp`` dividing the group counts are token-identical to ``tp=1``.
+    """
+
+    mesh: Mesh
+    axis: str = SERVING_TP_AXIS
+
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    @property
+    def param_rules(self) -> Dict[str, Axis]:
+        return {ax: self.axis for ax in _TP_PARAM}
+
+    @property
+    def act_rules(self) -> Dict[str, Axis]:
+        return {"heads": self.axis, "kv_heads": self.axis,
+                "mlp": self.axis, "vocab": self.axis,
+                "experts": self.axis}
+
+    @property
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def param_shardings(self, cfg):
+        """NamedSharding pytree for the full parameter tree of `cfg`
+        (non-divisible dims replicate, mirroring partition_specs)."""
+        import jax
+        from repro.models import api
+        mesh_sizes = {self.axis: self.tp}
+        pspecs = api.pspecs(cfg, self.param_rules, mesh_sizes)
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), pspecs,
+            is_leaf=lambda x: isinstance(x, P))
+
+    def cache_sharding(self, cfg) -> NamedSharding:
+        """KV cache sharding — one spec fits both layouts because the
+        KV-head dim sits at index 3 of the rank-5 ``k``/``v`` leaves
+        ([L, num_blocks, block_size, KH, hd] paged, [L, B, T, KH, hd]
+        contiguous).  Falls back to replicated when KH doesn't divide."""
+        ax = self.axis if (cfg.num_kv_heads
+                           and cfg.num_kv_heads % self.tp == 0) else None
+        return NamedSharding(self.mesh, P(None, None, None, ax, None))
+
+
+def serving_plan(mesh: Mesh, axis: str = SERVING_TP_AXIS) -> ServingPlan:
+    """The tensor-parallel serving plan for a 1-axis mesh (see
+    ServingPlan for the full mesh/axis contract)."""
+    assert axis in mesh.axis_names, (axis, mesh.axis_names)
+    return ServingPlan(mesh=mesh, axis=axis)
 
 
 # ----------------------------------------------------------------------

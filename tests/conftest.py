@@ -9,6 +9,15 @@ import jax  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "real_hardware: needs real multi-accelerator hardware; CPU CI "
+        "exercises the same paths via forced host-device fan-out "
+        "(tests/test_distributed.py, tests/test_tp_serving.py) and "
+        "these tests self-skip there")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

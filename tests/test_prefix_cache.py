@@ -426,3 +426,21 @@ def test_eos_none_preserves_length_only_stopping(setup):
     for ra, rb in zip(a, b):
         assert len(ra.output) == ra.max_new
         assert ra.output == rb.output
+
+
+# ----------------------------------------------------------------------
+# randomized scheduler audit (seeded tier; tests/test_property.py
+# widens the same harness with hypothesis-generated seeds)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 7, 19, 42])
+def test_random_traffic_scheduler_audit(seed):
+    """Random admit/harvest/evict/COW/rollback traffic through the REAL
+    ChunkedServer host machinery (model-free device-step stand-ins,
+    runtime/fuzz.py): RadixPrefixCache.check_invariants plus exact
+    reservation accounting assert after every host transition, and the
+    pool must be quiescent (no leaked refs/reservations) after every
+    wave."""
+    from repro.runtime.fuzz import run_fuzz_trace
+    srv = run_fuzz_trace(seed)
+    assert srv.audits > 0

@@ -110,6 +110,22 @@ def test_moe_router_weights_normalized(tokens, seed_k, seed):
     assert float(aux) > 0.3              # aux loss in a sane range
 
 
+@given(st.integers(0, 2 ** 32 - 1), st.integers(1, 3),
+       st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_serving_scheduler_invariants_random_traffic(seed, waves, n):
+    """Property: ANY random admit/harvest/evict/COW/rollback sequence
+    through the real ChunkedServer host machinery preserves the block
+    allocator + radix-tree invariants and exact reservation accounting
+    (runtime/fuzz.py audits after every host transition; device steps
+    are seeded-random stand-ins honoring the jitted units' contracts).
+    The seeded tier in tests/test_prefix_cache.py always runs; this
+    widens it to hypothesis-chosen traffic shapes."""
+    from repro.runtime.fuzz import run_fuzz_trace
+    srv = run_fuzz_trace(seed, waves=waves, requests_per_wave=n)
+    assert srv.audits > 0
+
+
 @given(st.integers(0, 10 ** 6))
 @settings(max_examples=10, deadline=None)
 def test_sw_score_invariances(seed):
