@@ -32,6 +32,16 @@ acceptance rate, accepted-tokens-per-step (the span loop's is 1.0 by
 construction), and greedy-output parity (exact acceptance — outputs
 must be bit-identical, asserted by CI on the uploaded snapshot).
 
+A fifth, fused-kernel protocol A/Bs ``kernel=False`` (gather path) vs
+``kernel=True`` (Pallas block-table walk, kernels/paged_attention) vs
+``kernel=True, fp8_kv=True, fp8_linear=True`` on the ShareGPT mix with
+paging + prefix cache + spec decode all on.  The CPU host runs the
+kernels in interpret mode, so the measured split is kept honest by
+pairing it with the roofline-modeled HBM bytes/step
+(core/roofline.paged_decode_kv_bytes): CI asserts the bf16 bitwise
+parity, the O(1) compile counts, the exact fp8 per-device KV shrink,
+and the modeled ratios — not CPU wall-clock ordering.
+
 A fourth, tensor-parallel protocol A/Bs ``tp=1`` vs ``tp=2/4`` on the
 ShareGPT mix (paged + prefix cache on) when the host exposes enough
 devices (CI forces 8 CPU devices via XLA_FLAGS): weights shard
@@ -57,6 +67,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.llama_te import CONFIG as MINI
+from repro.core import roofline
 from repro.core.bench import register
 from repro.core.timer import Timing
 from repro.models import api
@@ -244,6 +255,107 @@ def llm_generation():
         rows.append(Timing(
             f"measured(cpu)/spec-output-parity/{dtype_name}",
             0.0, 0, 1, derived=spec_parity, derived_name="bool"))
+        # fused-kernel A/B: the same scheduler + paged pool + prefix
+        # cache + spec decode, reading KV through the Pallas
+        # block-table kernels (kernel=True) instead of the gather
+        # path.  On this CPU host the kernels run in interpret mode,
+        # so the MEASURED numbers cannot show the HBM win — the
+        # honest A/B is: (a) bf16 outputs stay bit-identical, (b)
+        # compile counts stay O(1), (c) fp8_kv shrinks the per-device
+        # pool by exactly (hd+4)/(2*hd), and (d) the roofline model
+        # (core/roofline.paged_decode_kv_bytes) reports the
+        # bytes/step reduction a TPU backend would realize.
+        kern_kw = dict(batch_slots=4, max_len=96, chunk=16, span=8,
+                       paged=True, block_size=16, prefix_cache=True,
+                       spec_decode=4)
+        gk_srv = ChunkedServer(cfg, params, **kern_kw)
+        gk_srv.serve(clone_requests(base_reqs))      # compile warmup
+        gk_run = clone_requests(base_reqs)
+        gk_stats = gk_srv.serve(gk_run)
+        k_srv = ChunkedServer(cfg, params, kernel=True, **kern_kw)
+        k_srv.serve(clone_requests(base_reqs))       # compile warmup
+        k_run = clone_requests(base_reqs)
+        k_stats = k_srv.serve(k_run)
+        kern_parity = all(a.output == b.output
+                          for a, b in zip(gk_run, k_run))
+        f8_srv = ChunkedServer(cfg, params, kernel=True, fp8_kv=True,
+                               fp8_linear=True, **kern_kw)
+        f8_srv.serve(clone_requests(base_reqs))      # compile warmup
+        f8_run = clone_requests(base_reqs)
+        f8_stats = f8_srv.serve(f8_run)
+        f8_match = (sum(a.output == b.output
+                        for a, b in zip(gk_run, f8_run))
+                    / len(gk_run))
+        hd = cfg.head_dim
+        # modeled KV read traffic at the mix's mean final context
+        mean_ctx = int(sum(min(len(r.prompt) + len(r.output), 96)
+                           for r in gk_run) / len(gk_run))
+        modeled = roofline.paged_decode_speedup(
+            mean_ctx, block_size=16, max_blocks=-(-96 // 16),
+            kv_heads=cfg.num_kv_heads, head_dim=hd)
+        k_counts = k_srv.compile_counts()
+        rows.append(Timing(
+            f"measured(cpu)/kernel-gather-server/{dtype_name}",
+            0.0, 0, 1, derived=gk_stats["tokens_per_s"],
+            derived_name="tokens_per_s"))
+        rows.append(Timing(
+            f"measured(cpu)/kernel-fused-server/{dtype_name}",
+            0.0, 0, 1, derived=k_stats["tokens_per_s"],
+            derived_name="tokens_per_s"))
+        rows.append(Timing(
+            f"measured(cpu)/kernel-fp8-server/{dtype_name}",
+            0.0, 0, 1, derived=f8_stats["tokens_per_s"],
+            derived_name="tokens_per_s"))
+        rows.append(Timing(
+            f"measured(cpu)/kernel-output-parity/{dtype_name}",
+            0.0, 0, 1, derived=float(kern_parity),
+            derived_name="bool"))
+        rows.append(Timing(
+            f"modeled(hbm)/kernel-decode-speedup/{dtype_name}",
+            0.0, 0, 1, derived=modeled["kernel_speedup"],
+            derived_name="x"))
+        rows.append(Timing(
+            f"modeled(hbm)/fp8-kernel-decode-speedup/{dtype_name}",
+            0.0, 0, 1, derived=modeled["fp8_speedup"],
+            derived_name="x"))
+        kernel_sec = {
+            "gather_tokens_per_s": gk_stats["tokens_per_s"],
+            "kernel_tokens_per_s": k_stats["tokens_per_s"],
+            "fp8_tokens_per_s": f8_stats["tokens_per_s"],
+            "gather_prefill_seconds": gk_stats["prefill_seconds"],
+            "gather_decode_seconds": gk_stats["decode_seconds"],
+            "kernel_prefill_seconds": k_stats["prefill_seconds"],
+            "kernel_decode_seconds": k_stats["decode_seconds"],
+            "prefill_tokens": k_stats["prefill_tokens"],
+            "decode_tokens": k_stats["decode_tokens"],
+            # bf16 pools: bitwise contract, must be True
+            "outputs_identical": bool(kern_parity),
+            # fp8 pools: tolerance tier — fraction of requests whose
+            # greedy outputs happen to survive e4m3 KV + fp8 linears
+            "fp8_output_match_fraction": f8_match,
+            "compile_counts": {k: k_counts[k] for k in
+                               ("chunk_step", "decode_span",
+                                "verify_step")},
+            "fp8_compile_counts": {
+                k: f8_srv.compile_counts()[k] for k in
+                ("chunk_step", "decode_span", "verify_step")},
+            "kv_bytes_per_device": k_stats["kv_bytes_per_device"],
+            "fp8_kv_bytes_per_device": f8_stats["kv_bytes_per_device"],
+            "fp8_kv_shrink": (f8_stats["kv_bytes_per_device"]
+                              / k_stats["kv_bytes_per_device"]),
+            # e4m3 codes + one f32 scale per token-row per kv-head,
+            # vs the bf16 pool — CI asserts recorded == expected
+            "fp8_kv_shrink_expected": (hd + 4) / (2 * hd),
+            "modeled": {
+                "mean_final_context": float(mean_ctx),
+                "gather_bytes_per_step": modeled["gather_bytes"],
+                "kernel_bytes_per_step": modeled["kernel_bytes"],
+                "fp8_kernel_bytes_per_step":
+                    modeled["fp8_kernel_bytes"],
+                "kernel_decode_speedup": modeled["kernel_speedup"],
+                "fp8_decode_speedup": modeled["fp8_speedup"],
+            },
+        }
         # tensor-parallel A/B: the same scheduler + paged pool + prefix
         # cache over a tp mesh (weights head-wise/column-row, KV pool
         # along the KV-head axis; sharding/plans.ServingPlan).  Greedy
@@ -360,6 +472,7 @@ def llm_generation():
                     spec_srv.compile_counts()["verify_step"],
                 "outputs_identical": bool(spec_parity),
             },
+            "kernel": kernel_sec,
             "tp": tp_sec,
         }
     # paper reference points (H800, llama-2-7B)

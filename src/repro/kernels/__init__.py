@@ -1,6 +1,23 @@
 """Pallas TPU kernels for the paper's hot spots, with jnp oracles.
 
-matmul (mma/wgmma analog) | fp8_matmul (QGMMA) | flash_attention |
-dpx_kernel (tropical matmul + Smith-Waterman) | async_pipeline (TMA).
-Validated on CPU via interpret=True against ref.py.
+Module map
+----------
+matmul           — tiled MXU matmul (the paper's mma/wgmma analog)
+fp8_matmul       — fp8-storage matmul with scale epilogue (QGMMA)
+flash_attention  — blockwise online-softmax attention (training/prefill)
+paged_attention  — fused paged flash-decode/chunk for serving: walks
+                   the per-slot block table *inside* the kernel, DMAs
+                   only the valid KV blocks from the pool into VMEM,
+                   and optionally dequantizes e4m3 pools in-tile;
+                   bitwise-equal to the gather path of
+                   models/attention (see its docstring for the
+                   mul+reduce parity contract and fp8 scale layout)
+dpx_kernel       — tropical matmul + Smith-Waterman (DPX analog)
+async_pipeline   — double-buffered DMA pipeline (TMA analog)
+ops              — jit'd public wrappers: tile autotuning/auto-fit,
+                   oversize-tile ValueError guard, interpret default
+ref              — jnp oracles for the above
+
+Validated on CPU via interpret=True against ref.py and the
+models/attention oracles (tests/test_kernels.py, test_paged_kernel.py).
 """

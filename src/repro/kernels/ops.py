@@ -1,7 +1,17 @@
 """jit'd public wrappers for the kernel suite.
 
 Tile shapes default to the dissection-driven autotuner
-(core/mxu_model.pick_tile) — the paper's measure->model->optimize loop.
+(core/mxu_model.pick_tile) — the paper's measure->model->optimize loop
+— or, where a kernel has fixed defaults, to an automatic
+``min(default, operand)`` fit, so decode-sized operands (S, m or n of
+1-16 on the serving hot path) never inherit a 128-wide training tile.
+Tile policy: ``0`` means "auto" everywhere; an explicitly passed tile
+may be *smaller* than the operand (it is still divisor-fitted to tile
+evenly) but a tile strictly larger than its operand dimension raises
+``ValueError`` instead of being silently clamped — a silent clamp hides
+a mis-sized launch, which is exactly the class of bug the decode-tile
+audit was after.
+
 `interpret` defaults to True off-TPU so the whole suite validates on
 this CPU host; on a real TPU backend it compiles to Mosaic.
 """
@@ -20,6 +30,7 @@ from repro.kernels import dpx_kernel as _dpx
 from repro.kernels import flash_attention as _flash
 from repro.kernels import fp8_matmul as _fp8
 from repro.kernels import matmul as _mm
+from repro.kernels import paged_attention as _paged
 
 
 def on_tpu() -> bool:
@@ -28,6 +39,17 @@ def on_tpu() -> bool:
 
 def _interp(interpret: Optional[bool]) -> bool:
     return (not on_tpu()) if interpret is None else interpret
+
+
+def _check_tiles(fn_name: str, **tile_vs_dim) -> None:
+    """Reject explicitly-requested tiles strictly larger than their
+    operand dimension (0 = auto is always fine)."""
+    for name, (tile, dim) in tile_vs_dim.items():
+        if tile and tile > dim:
+            raise ValueError(
+                f"{fn_name}: requested tile {name}={tile} exceeds the "
+                f"operand dimension {dim}; pass {name}=0 (auto) or a "
+                f"tile <= {dim}")
 
 
 def _fit_tiles(m, n, k, bm, bn, bk):
@@ -45,6 +67,7 @@ def matmul(a, b, *, bm: int = 0, bn: int = 0, bk: int = 0,
            interpret: Optional[bool] = None):
     m, k = a.shape
     n = b.shape[1]
+    _check_tiles("matmul", bm=(bm, m), bn=(bn, n), bk=(bk, k))
     if not (bm and bn and bk):
         t = mxu_model.pick_tile(m, n, k, str(a.dtype))
         bm, bn, bk = t.bm, t.bn, t.bk
@@ -58,6 +81,7 @@ def fp8_matmul(aq, bq, sx, sw, *, bm: int = 0, bn: int = 0, bk: int = 0,
                interpret: Optional[bool] = None):
     m, k = aq.shape
     n = bq.shape[1]
+    _check_tiles("fp8_matmul", bm=(bm, m), bn=(bn, n), bk=(bk, k))
     if not (bm and bn and bk):
         t = mxu_model.pick_tile(m, n, k, str(aq.dtype))
         bm, bn, bk = t.bm, t.bn, t.bk
@@ -68,16 +92,25 @@ def fp8_matmul(aq, bq, sx, sw, *, bm: int = 0, bn: int = 0, bk: int = 0,
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "bq", "bk", "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
-                    bk: int = 128, interpret: Optional[bool] = None):
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 0,
+                    bk: int = 0, interpret: Optional[bool] = None):
+    """bq/bk default 0 = auto ``min(128, S)`` — decode-length inputs
+    (S < 128) get an S-sized tile instead of relying on a silent clamp
+    of the old 128 default."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    _check_tiles("flash_attention", bq=(bq, Sq), bk=(bk, Sk))
+    bq = bq or min(128, Sq)
+    bk = bk or min(128, Sk)
     return _flash.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
                                   interpret=_interp(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def tropical_matmul(a, b, *, bm: int = 32, bn: int = 32, bk: int = 32,
+def tropical_matmul(a, b, *, bm: int = 0, bn: int = 0, bk: int = 0,
                     interpret: Optional[bool] = None):
-    bm, bn, bk = _fit_tiles(a.shape[0], b.shape[1], a.shape[1], bm, bn, bk)
+    m, n, k = a.shape[0], b.shape[1], a.shape[1]
+    _check_tiles("tropical_matmul", bm=(bm, m), bn=(bn, n), bk=(bk, k))
+    bm, bn, bk = _fit_tiles(m, n, k, bm or 32, bn or 32, bk or 32)
     return _dpx.tropical_matmul(a, b, bm=bm, bn=bn, bk=bk,
                                 interpret=_interp(interpret))
 
@@ -92,8 +125,32 @@ def smith_waterman(seq_a, seq_b, *, match: int = 2, mismatch: int = -1,
 
 @functools.partial(jax.jit,
                    static_argnames=("bm", "bn", "bk", "stages", "interpret"))
-def pipelined_matmul(a, b, *, bm: int = 32, bn: int = 32, bk: int = 32,
+def pipelined_matmul(a, b, *, bm: int = 0, bn: int = 0, bk: int = 0,
                      stages: int = 2, interpret: Optional[bool] = None):
-    bm, bn, bk = _fit_tiles(a.shape[0], b.shape[1], a.shape[1], bm, bn, bk)
+    m, n, k = a.shape[0], b.shape[1], a.shape[1]
+    _check_tiles("pipelined_matmul", bm=(bm, m), bn=(bn, n), bk=(bk, k))
+    bm, bn, bk = _fit_tiles(m, n, k, bm or 32, bn or 32, bk or 32)
     return _async.pipelined_matmul(a, b, bm=bm, bn=bn, bk=bk, stages=stages,
                                    interpret=_interp(interpret))
+
+
+def paged_decode_attention(q, ck, cv, block_table, kv_len, *,
+                           k_scale=None, v_scale=None,
+                           interpret: Optional[bool] = None):
+    """Fused paged flash-decode (kernels/paged_attention.paged_decode):
+    the block-table walk runs inside the kernel, touching only the
+    valid blocks.  Not jitted here — serving callers jit the whole
+    step; the tile is the slot's whole virtual extent so there is no
+    tile parameter to audit."""
+    return _paged.paged_decode(q, ck, cv, block_table, kv_len,
+                               k_scale=k_scale, v_scale=v_scale,
+                               interpret=_interp(interpret))
+
+
+def paged_chunk_attention(q, ck, cv, block_table, pos, *,
+                          k_scale=None, v_scale=None,
+                          interpret: Optional[bool] = None):
+    """Fused paged chunk attention (kernels/paged_attention.paged_chunk)."""
+    return _paged.paged_chunk(q, ck, cv, block_table, pos,
+                              k_scale=k_scale, v_scale=v_scale,
+                              interpret=_interp(interpret))

@@ -1,0 +1,299 @@
+"""Paged flash-decode/chunk attention: block-table walk inside the kernel.
+
+The serving hot path (runtime/server.py) reads KV through
+`attention.gather_paged_cache`, which materializes a
+[B, max_blocks*block_size, KH, hd] virtual view per layer per step — an
+O(max_len) gather that costs exactly the HBM bandwidth the paper's
+memory-hierarchy dissection says decode must conserve.  These kernels
+never build that view: each (b, kv_head) grid cell walks the slot's
+block table, DMAs only the `ceil(kv_len/bs)` *valid* physical blocks
+from the pool (ANY/HBM memory space) into a VMEM scratch, and runs the
+softmax(QK^T)V rows there.  Unallocated table entries (-1) beyond the
+valid prefix are never touched — the loop bound comes from `kv_len`,
+not the table width — so poisoned pool blocks cannot leak (the gather
+path instead relies on masking; see attention.gather_paged_cache).
+
+Bit-parity contract
+-------------------
+The bf16/f32 kernels are BITWISE identical to the gather path
+(`gather_paged_cache` + `decode_attention`/`chunk_attention`).  That
+only holds because both sides compute scores and the PV contraction as
+an explicit broadcast-multiply + `jnp.sum` in fp32 (`sdpa_rows` here,
+the batched analog in models/attention.py): XLA strength-reduces
+small-M `dot_general`s (the G=1 decode matvec) data-dependently inside
+larger jitted graphs, so a dot-based kernel and a dot-based oracle
+round differently at ~1 ulp.  The mul+reduce form lowers to the same
+HLO in both, eagerly, jitted, and under shard_map.  Scratch rows past
+the valid frontier are zero-filled: the oracle's masked positions carry
+exact-0.0 softmax weight (NEG_INF scores underflow), and 0.0 * x == 0.0
+for any finite x, so the padded sums agree bitwise too.
+
+FP8 layout (e4m3 KV pool)
+-------------------------
+With `k_scale`/`v_scale` given, the pools hold e4m3 codes and the
+scales hold one f32 per token-row per kv-head ([NB, bs, KH, 1] — the
+"per-block scales" of the TE recipe at block = pool row).  The kernel
+DMAs the fp8 block plus its scale column and dequantizes in-tile
+(`(codes.astype(f32) * scale).astype(q.dtype)`) into the same VMEM
+scratch — elementwise identical to the dequantizing gather in
+models/attention.gather_paged_cache_fp8, so fp8-kernel vs fp8-gather
+is still bit-exact; only fp8-vs-bf16 needs a tolerance tier.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _interp(interpret: Optional[bool]) -> bool:
+    return (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+
+
+def sdpa_rows(q2: jax.Array, k2: jax.Array, v2: jax.Array,
+              bound: jax.Array) -> jax.Array:
+    """softmax(q2 @ k2^T / sqrt(hd)) @ v2 for q2 [R, hd] vs k2/v2
+    [T, hd], with per-row valid length `bound` [R] int32; fp32 out.
+
+    Multiply+reduce instead of dot_general — see the module docstring:
+    this is what makes the kernel bitwise-equal to the batched oracle.
+    """
+    hd = q2.shape[-1]
+    s = jnp.sum(q2.astype(jnp.float32)[:, None, :]
+                * k2.astype(jnp.float32)[None, :, :], axis=-1) * hd ** -0.5
+    t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(t < bound[:, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    pv = p.astype(v2.dtype)
+    return jnp.sum(pv.astype(jnp.float32)[:, :, None]
+                   * v2.astype(jnp.float32)[None, :, :], axis=1)
+
+
+# ----------------------------------------------------------------------
+# block-table walk: DMA valid blocks into VMEM scratch
+# ----------------------------------------------------------------------
+
+def _fetch_blocks(bt_ref, b, kh, nvb, kpool_ref, vpool_ref, k_s, v_s,
+                  sem, *, bs):
+    """Copy physical blocks bt[b, 0:nvb] of both pools into the scratch
+    rows [i*bs, (i+1)*bs).  -1 entries only occur at i >= nvb (the
+    allocator assigns blocks up to the frontier), so the max(.., 0)
+    clamp is pure defense; rows past nvb*bs stay zero-filled."""
+
+    def body(i, _):
+        blk = jnp.maximum(bt_ref[b, i], 0)
+        for pool, dst in ((kpool_ref, k_s), (vpool_ref, v_s)):
+            cp = pltpu.make_async_copy(pool.at[blk, :, kh, :],
+                                       dst.at[pl.ds(i * bs, bs), :], sem)
+            cp.start()
+            cp.wait()
+        return 0
+
+    jax.lax.fori_loop(0, nvb, body, 0)
+
+
+def _fetch_blocks_fp8(bt_ref, b, kh, nvb, kpool_ref, vpool_ref,
+                      ks_ref, vs_ref, k_s, v_s, kq_s, sq_s, sem, *, bs):
+    """fp8 variant: DMA the e4m3 block + its per-row scale column into
+    small staging scratch, dequantize, store into the bf16/f32 rows."""
+
+    def body(i, _):
+        blk = jnp.maximum(bt_ref[b, i], 0)
+        for pool, scl, dst in ((kpool_ref, ks_ref, k_s),
+                               (vpool_ref, vs_ref, v_s)):
+            cp = pltpu.make_async_copy(pool.at[blk, :, kh, :], kq_s, sem)
+            cp.start()
+            cp.wait()
+            cp = pltpu.make_async_copy(scl.at[blk, :, kh, :], sq_s, sem)
+            cp.start()
+            cp.wait()
+            dst[pl.ds(i * bs, bs), :] = (
+                kq_s[...].astype(jnp.float32) * sq_s[...]
+            ).astype(dst.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, nvb, body, 0)
+
+
+# ----------------------------------------------------------------------
+# decode: one query row per slot
+# ----------------------------------------------------------------------
+
+def _decode_kernel(bt_ref, len_ref, q_ref, kpool_ref, vpool_ref,
+                   o_ref, k_s, v_s, sem, *, bs):
+    b = pl.program_id(0)
+    kh = pl.program_id(1)
+    k_s[...] = jnp.zeros_like(k_s)
+    v_s[...] = jnp.zeros_like(v_s)
+    bound = len_ref[b]
+    nvb = (bound + bs - 1) // bs
+    _fetch_blocks(bt_ref, b, kh, nvb, kpool_ref, vpool_ref, k_s, v_s,
+                  sem, bs=bs)
+    G = q_ref.shape[2]
+    o_ref[0, 0] = sdpa_rows(q_ref[0, 0], k_s[...], v_s[...],
+                            jnp.full((G,), bound))
+
+
+def _decode_kernel_fp8(bt_ref, len_ref, q_ref, kpool_ref, vpool_ref,
+                       ks_ref, vs_ref, o_ref, k_s, v_s, kq_s, sq_s, sem,
+                       *, bs):
+    b = pl.program_id(0)
+    kh = pl.program_id(1)
+    k_s[...] = jnp.zeros_like(k_s)
+    v_s[...] = jnp.zeros_like(v_s)
+    bound = len_ref[b]
+    nvb = (bound + bs - 1) // bs
+    _fetch_blocks_fp8(bt_ref, b, kh, nvb, kpool_ref, vpool_ref, ks_ref,
+                      vs_ref, k_s, v_s, kq_s, sq_s, sem, bs=bs)
+    G = q_ref.shape[2]
+    o_ref[0, 0] = sdpa_rows(q_ref[0, 0], k_s[...], v_s[...],
+                            jnp.full((G,), bound))
+
+
+def paged_decode(q: jax.Array, ck: jax.Array, cv: jax.Array,
+                 block_table: jax.Array, kv_len: jax.Array, *,
+                 k_scale: Optional[jax.Array] = None,
+                 v_scale: Optional[jax.Array] = None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """One-step paged decode.  q [B,1,H,hd]; pools [NB,bs,KH,hd];
+    block_table [B,MB] int32 (-1 = unallocated); kv_len scalar or [B].
+    With `k_scale`/`v_scale` ([NB,bs,KH,1] f32) the pools are e4m3 and
+    the kernel dequantizes in-tile to q.dtype.  Returns [B,1,H,hd]."""
+    B, _, H, hd = q.shape
+    NB, bs, KH, _ = ck.shape
+    MB = block_table.shape[1]
+    G, T = H // KH, MB * bs
+    qg = q.reshape(B, KH, G, hd)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len), (B,)).astype(jnp.int32)
+    fp8 = k_scale is not None
+    scratch_dtype = q.dtype if fp8 else ck.dtype
+    pool_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    in_specs = [pl.BlockSpec((1, 1, G, hd), lambda b, kh, *_: (b, kh, 0, 0)),
+                pool_spec, pool_spec]
+    operands = [block_table, kv_len, qg, ck, cv]
+    scratch = [pltpu.VMEM((T, hd), scratch_dtype),
+               pltpu.VMEM((T, hd), scratch_dtype)]
+    if fp8:
+        in_specs += [pool_spec, pool_spec]
+        operands += [k_scale, v_scale]
+        scratch += [pltpu.VMEM((bs, hd), ck.dtype),
+                    pltpu.VMEM((bs, 1), jnp.float32)]
+        kern = functools.partial(_decode_kernel_fp8, bs=bs)
+    else:
+        kern = functools.partial(_decode_kernel, bs=bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KH),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, kh, *_: (b, kh, 0, 0)),
+        scratch_shapes=scratch + [pltpu.SemaphoreType.DMA],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, hd), jnp.float32),
+        interpret=_interp(interpret),
+    )(*operands)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# chunk: a C-token prefill window per slot (cache-aware causal)
+# ----------------------------------------------------------------------
+
+def _chunk_kernel(bt_ref, pos_ref, q_ref, kpool_ref, vpool_ref,
+                  o_ref, k_s, v_s, sem, *, bs, C):
+    b = pl.program_id(0)
+    kh = pl.program_id(1)
+    k_s[...] = jnp.zeros_like(k_s)
+    v_s[...] = jnp.zeros_like(v_s)
+    pos = pos_ref[b]
+    nvb = jnp.minimum((pos + C + bs - 1) // bs, bt_ref.shape[1])
+    _fetch_blocks(bt_ref, b, kh, nvb, kpool_ref, vpool_ref, k_s, v_s,
+                  sem, bs=bs)
+    G, hd = q_ref.shape[2], q_ref.shape[4]
+    q2 = q_ref[0, 0].reshape(G * C, hd)
+    # row (g, i) attends cache positions <= pos + i (the chunk's own
+    # k/v is already written at those positions)
+    bound = jnp.tile(pos + 1 + jax.lax.iota(jnp.int32, C), (G,))
+    o_ref[0, 0] = sdpa_rows(q2, k_s[...], v_s[...], bound
+                            ).reshape(G, C, hd)
+
+
+def _chunk_kernel_fp8(bt_ref, pos_ref, q_ref, kpool_ref, vpool_ref,
+                      ks_ref, vs_ref, o_ref, k_s, v_s, kq_s, sq_s, sem,
+                      *, bs, C):
+    b = pl.program_id(0)
+    kh = pl.program_id(1)
+    k_s[...] = jnp.zeros_like(k_s)
+    v_s[...] = jnp.zeros_like(v_s)
+    pos = pos_ref[b]
+    nvb = jnp.minimum((pos + C + bs - 1) // bs, bt_ref.shape[1])
+    _fetch_blocks_fp8(bt_ref, b, kh, nvb, kpool_ref, vpool_ref, ks_ref,
+                      vs_ref, k_s, v_s, kq_s, sq_s, sem, bs=bs)
+    G, hd = q_ref.shape[2], q_ref.shape[4]
+    q2 = q_ref[0, 0].reshape(G * C, hd)
+    bound = jnp.tile(pos + 1 + jax.lax.iota(jnp.int32, C), (G,))
+    o_ref[0, 0] = sdpa_rows(q2, k_s[...], v_s[...], bound
+                            ).reshape(G, C, hd)
+
+
+def paged_chunk(q: jax.Array, ck: jax.Array, cv: jax.Array,
+                block_table: jax.Array, pos: jax.Array, *,
+                k_scale: Optional[jax.Array] = None,
+                v_scale: Optional[jax.Array] = None,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Paged chunk attention.  q [B,C,H,hd]; `pos` [B] is each slot's
+    cache length BEFORE the chunk (row i sits at position pos+i and the
+    chunk's k/v must already be scattered).  Rows past a slot's valid
+    token count attend in-pool garbage and produce garbage rows the
+    caller discards — same contract as attention.chunk_attention."""
+    B, C, H, hd = q.shape
+    NB, bs, KH, _ = ck.shape
+    MB = block_table.shape[1]
+    G, T = H // KH, MB * bs
+    qc = q.reshape(B, C, KH, G, hd).transpose(0, 2, 3, 1, 4)
+    pos = jnp.broadcast_to(jnp.asarray(pos), (B,)).astype(jnp.int32)
+    fp8 = k_scale is not None
+    scratch_dtype = q.dtype if fp8 else ck.dtype
+    pool_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    in_specs = [pl.BlockSpec((1, 1, G, C, hd),
+                             lambda b, kh, *_: (b, kh, 0, 0, 0)),
+                pool_spec, pool_spec]
+    operands = [block_table, pos, qc, ck, cv]
+    scratch = [pltpu.VMEM((T, hd), scratch_dtype),
+               pltpu.VMEM((T, hd), scratch_dtype)]
+    if fp8:
+        in_specs += [pool_spec, pool_spec]
+        operands += [k_scale, v_scale]
+        scratch += [pltpu.VMEM((bs, hd), ck.dtype),
+                    pltpu.VMEM((bs, 1), jnp.float32)]
+        kern = functools.partial(_chunk_kernel_fp8, bs=bs, C=C)
+    else:
+        kern = functools.partial(_chunk_kernel, bs=bs, C=C)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KH),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, C, hd),
+                               lambda b, kh, *_: (b, kh, 0, 0, 0)),
+        scratch_shapes=scratch + [pltpu.SemaphoreType.DMA],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, C, hd), jnp.float32),
+        interpret=_interp(interpret),
+    )(*operands)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)

@@ -73,6 +73,20 @@ def main() -> None:
                          "bit-identical to K=0, only the number of "
                          "model dispatches per token changes.  "
                          "Default 0 = off (plain decode spans)")
+    ap.add_argument("--kernel", action="store_true",
+                    help="read paged KV through the fused Pallas "
+                         "block-table kernels (kernels/paged_attention"
+                         ") instead of the gather path — bf16 greedy "
+                         "outputs are bit-identical either way "
+                         "(chunked engine, paged pool)")
+    ap.add_argument("--fp8-kv", action="store_true",
+                    help="store the paged KV pool as fp8 e4m3 codes + "
+                         "per-row f32 scales (~0.53x pool bytes at "
+                         "head_dim 64; tolerance-tier outputs)")
+    ap.add_argument("--fp8-linear", action="store_true",
+                    help="serve the projection/MLP matmuls through "
+                         "fp8-quantized weights (te/linear; tp=1, "
+                         "dense only)")
     ap.add_argument("--tp", type=int, default=1, metavar="N",
                     help="tensor-parallel degree (chunked engine): "
                          "shard the weights head-wise/column-row-wise "
@@ -114,6 +128,8 @@ def main() -> None:
                             prefix_cache=not args.no_prefix_cache,
                             eos_id=args.eos_id,
                             spec_decode=args.spec_decode,
+                            kernel=args.kernel, fp8_kv=args.fp8_kv,
+                            fp8_linear=args.fp8_linear,
                             tp=args.tp)
     else:
         if args.spec_decode:
@@ -122,6 +138,9 @@ def main() -> None:
         if args.tp > 1:
             raise SystemExit("--tp needs the chunked engine (the slot "
                              "baseline is single-device)")
+        if args.kernel or args.fp8_kv or args.fp8_linear:
+            raise SystemExit("--kernel/--fp8-kv/--fp8-linear need the "
+                             "chunked engine's paged pool")
         srv = SlotServer(cfg, params, batch_slots=args.slots,
                          max_len=max_len, eos_id=args.eos_id)
     if args.tp > 1:

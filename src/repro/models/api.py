@@ -20,8 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.models import (attention, common, encdec, hybrid, ssm_lm,
-                          transformer)
+from repro.models import common, encdec, hybrid, ssm_lm, transformer
 from repro.models.common import ParamSpec
 
 Params = Dict[str, Any]
@@ -71,13 +70,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16, *, paged: bool = False,
                block_size: int = 16,
                num_blocks: Optional[int] = None,
-               sharding=None) -> Params:
+               sharding=None, fp8_kv: bool = False) -> Params:
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.init_cache(cfg, batch, max_len, dtype,
                                       paged=paged, block_size=block_size,
                                       num_blocks=num_blocks,
-                                      sharding=sharding)
-    if paged or sharding is not None:
+                                      sharding=sharding, fp8_kv=fp8_kv)
+    if paged or sharding is not None or fp8_kv:
         raise NotImplementedError(
             f"paged/sharded KV cache is transformer-only for now "
             f"(family {cfg.family})")
@@ -92,11 +91,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 token: jax.Array, pos: jax.Array,
-                block_table: Optional[jax.Array] = None
+                block_table: Optional[jax.Array] = None, **fwd_kw
                 ) -> Tuple[jax.Array, Params]:
+    """``fwd_kw`` (transformer families only): kernel= routes paged
+    reads through the fused Pallas block-table kernels, quant= supplies
+    pre-quantized fp8 serving weights, mesh=/mesh_axis= run the kernel
+    under shard_map (see transformer.decode_step)."""
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.decode_step(cfg, params, cache, token, pos,
-                                       block_table)
+                                       block_table, **fwd_kw)
+    if fwd_kw:
+        raise NotImplementedError(
+            f"kernel/fp8 serving options are transformer-only (family "
+            f"{cfg.family})")
     if block_table is not None:
         raise NotImplementedError(
             f"paged KV cache is transformer-only for now (family "
@@ -112,7 +119,7 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
 
 def chunk_step(cfg: ModelConfig, params: Params, cache: Params,
                tokens: jax.Array, pos: jax.Array, n_tokens: jax.Array,
-               block_table: Optional[jax.Array] = None
+               block_table: Optional[jax.Array] = None, **fwd_kw
                ) -> Tuple[jax.Array, Params]:
     """Chunk-write serving step: per slot, write `n_tokens[b]` of the
     C-wide `tokens[b]` into the KV cache at `pos[b]` and return logits
@@ -122,7 +129,7 @@ def chunk_step(cfg: ModelConfig, params: Params, cache: Params,
     `init_cache(..., paged=True)`."""
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.chunk_step(cfg, params, cache, tokens, pos,
-                                      n_tokens, block_table)
+                                      n_tokens, block_table, **fwd_kw)
     raise NotImplementedError(
         f"chunked prefill is transformer-only for now (family "
         f"{cfg.family}); use prefill/decode_step")
@@ -130,7 +137,7 @@ def chunk_step(cfg: ModelConfig, params: Params, cache: Params,
 
 def verify_step(cfg: ModelConfig, params: Params, cache: Params,
                 tokens: jax.Array, pos: jax.Array,
-                block_table: Optional[jax.Array] = None
+                block_table: Optional[jax.Array] = None, **fwd_kw
                 ) -> Tuple[jax.Array, Params]:
     """Speculative-decode verify: score a [B, C] window of (current
     token + C-1 drafts) per slot and return the greedy argmax at every
@@ -139,7 +146,7 @@ def verify_step(cfg: ModelConfig, params: Params, cache: Params,
     (runtime/spec_decode.py) compiles it exactly once."""
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.verify_step(cfg, params, cache, tokens, pos,
-                                       block_table)
+                                       block_table, **fwd_kw)
     raise NotImplementedError(
         f"speculative decoding is transformer-only for now (family "
         f"{cfg.family}); use prefill/decode_step")
@@ -154,8 +161,9 @@ def cow_copy_block(cfg: ModelConfig, cache: Params, src, dst) -> Params:
         raise NotImplementedError(
             f"paged KV cache is transformer-only for now (family "
             f"{cfg.family})")
-    k, v = attention.copy_paged_block(cache["k"], cache["v"], src, dst)
-    return {"k": k, "v": v}
+    # tree_map so the fp8 layout's scale leaves ride along with k/v
+    return jax.tree_util.tree_map(
+        lambda leaf: leaf.at[:, dst].set(leaf[:, src]), cache)
 
 
 def compile_count(fn) -> int:

@@ -83,6 +83,35 @@ def out_project(p, o: jax.Array, *, groups: int = 0) -> jax.Array:
     return constrain(y, ("batch", "seq", "embed"))
 
 
+def qkv_project_fp8(cfg, p, q8, x: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """fp8 serving variant of `qkv_project`: x through weights
+    pre-quantized to e4m3 by te/linear.quantize_serving_params, with a
+    fresh per-call activation scale (te/linear.fp8_serving_dot).
+    Biases, if any, stay in the bf16 params `p`.  tp=1 serving only —
+    there is no grouped/deterministic-reduction structure here."""
+    from repro.te import linear as te_linear
+    q = te_linear.fp8_serving_dot(x, q8["wq"])
+    k = te_linear.fp8_serving_dot(x, q8["wk"])
+    v = te_linear.fp8_serving_dot(x, q8["wv"])
+    if cfg.use_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def out_project_fp8(p, q8, o: jax.Array) -> jax.Array:
+    """fp8 serving variant of `out_project` (tp=1 only)."""
+    from repro.te import linear as te_linear
+    y = te_linear.fp8_serving_dot(o, q8["wo"], x_contract_ndim=2,
+                                  w_contract_ndim=2)
+    return constrain(y, ("batch", "seq", "embed"))
+
+
 # ----------------------------------------------------------------------
 # flash attention (pure jnp, the oracle + XLA path)
 # ----------------------------------------------------------------------
@@ -436,20 +465,34 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     Memory is linear in T, so no chunking is needed even at T=512k; with
     the cache sequence-sharded ("kv_seq" -> a mesh axis) XLA emits the
     split-K/flash-decode pattern (partial max/sum + small all-reduces).
+
+    The score and PV contractions are explicit broadcast-multiply +
+    `jnp.sum` rather than einsum/dot_general: this function is the
+    bit-parity oracle for kernels/paged_attention.paged_decode, and XLA
+    strength-reduces the small-M decode dots (G=1 is a matvec)
+    data-dependently inside larger jitted graphs, so a dot-based oracle
+    and the per-(b,kh)-slice kernel body round differently at ~1 ulp.
+    The mul+reduce form lowers identically in both.
     """
     B, _, H, hd = q.shape
     T, KH = k_cache.shape[1], k_cache.shape[2]
     G = H // KH
     qg = q.reshape(B, KH, G, hd)
-    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
-                   preferred_element_type=jnp.float32) * hd ** -0.5
+    kt = k_cache.transpose(0, 2, 1, 3)            # [B,KH,T,hd]
+    vt = v_cache.transpose(0, 2, 1, 3)
+    s = jnp.sum(qg.astype(jnp.float32)[:, :, :, None, :]
+                * kt.astype(jnp.float32)[:, :, None, :, :],
+                axis=-1) * hd ** -0.5             # [B,KH,G,T]
     kv_len = jnp.asarray(kv_len)
     bound = kv_len[:, None, None, None] if kv_len.ndim == 1 else kv_len
     valid = jnp.arange(T)[None, None, None, :] < bound
     s = jnp.where(valid, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
-                   preferred_element_type=jnp.float32)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    pv = p.astype(v_cache.dtype)
+    o = jnp.sum(pv.astype(jnp.float32)[:, :, :, :, None]
+                * vt.astype(jnp.float32)[:, :, None, :, :], axis=3)
     return o.reshape(B, 1, H, hd).astype(q.dtype)
 
 
@@ -467,19 +510,30 @@ def chunk_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     O(C * T) scores (C is the chunk size, 16-64), never O(S^2).
     Rows past a slot's valid token count attend garbage but only
     produce garbage in their own output rows, which callers discard.
+
+    Like `decode_attention`, the contractions are broadcast-multiply +
+    `jnp.sum` so this stays the bitwise oracle for
+    kernels/paged_attention.paged_chunk (see that module's docstring
+    for why dot_general breaks ~1-ulp parity at small M).
     """
     B, C, H, hd = q.shape
     T, KH = k_cache.shape[1], k_cache.shape[2]
     G = H // KH
-    qg = q.reshape(B, C, KH, G, hd)
-    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k_cache,
-                   preferred_element_type=jnp.float32) * hd ** -0.5
+    qc = q.reshape(B, C, KH, G, hd).transpose(0, 2, 3, 1, 4)  # [B,KH,G,C,hd]
+    kt = k_cache.transpose(0, 2, 1, 3)                        # [B,KH,T,hd]
+    vt = v_cache.transpose(0, 2, 1, 3)
+    s = jnp.sum(qc.astype(jnp.float32)[:, :, :, :, None, :]
+                * kt.astype(jnp.float32)[:, :, None, None, :, :],
+                axis=-1) * hd ** -0.5                         # [B,KH,G,C,T]
     mask = jnp.arange(T)[None, None, :] <= q_positions[:, :, None]  # [B,C,T]
     s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v_cache.dtype), v_cache,
-                   preferred_element_type=jnp.float32)
-    return o.reshape(B, C, H, hd).astype(q.dtype)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    pv = p.astype(v_cache.dtype)
+    o = jnp.sum(pv.astype(jnp.float32)[:, :, :, :, :, None]
+                * vt.astype(jnp.float32)[:, :, None, None, :, :], axis=4)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)
 
 
 def update_cache(cache_k: jax.Array, cache_v: jax.Array, k1: jax.Array,
@@ -521,10 +575,24 @@ def update_cache(cache_k: jax.Array, cache_v: jax.Array, k1: jax.Array,
 # only pin the blocks their live prefix actually covers.
 
 def init_paged_kv_cache(num_blocks: int, block_size: int, kv_heads: int,
-                        head_dim: int, *, layers: int, dtype=jnp.bfloat16
-                        ) -> Dict[str, jax.Array]:
+                        head_dim: int, *, layers: int, dtype=jnp.bfloat16,
+                        fp8: bool = False) -> Dict[str, jax.Array]:
+    """Stacked block pool.  With ``fp8=True`` the k/v pools hold e4m3
+    codes and two extra f32 leaves "k_scale"/"v_scale" of shape
+    [L, NB, bs, KH, 1] hold one scale per token-row per kv-head (the
+    per-block scales of te/fp8.quantize_rowwise at block = pool row).
+    The scale leaves are rank-5 like the pools with KH on axis 3, so
+    the single broadcast cache sharding of sharding/plans.py applies
+    to every leaf unchanged."""
     shape = (layers, num_blocks, block_size, kv_heads, head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if not fp8:
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    from repro.te import fp8 as te_fp8
+    sshape = shape[:-1] + (1,)
+    return {"k": jnp.zeros(shape, te_fp8.E4M3),
+            "v": jnp.zeros(shape, te_fp8.E4M3),
+            "k_scale": jnp.ones(sshape, jnp.float32),
+            "v_scale": jnp.ones(sshape, jnp.float32)}
 
 
 def gather_paged_cache(ck: jax.Array, cv: jax.Array,
@@ -533,12 +601,23 @@ def gather_paged_cache(ck: jax.Array, cv: jax.Array,
     """Materialize each slot's virtual cache view through its table.
 
     ck/cv: [num_blocks, bs, KH, hd]; block_table: [B, max_blocks].
-    Returns [B, max_blocks*bs, KH, hd].  Unallocated entries (-1) read
-    physical block 0 — garbage, but every such virtual position lies at
-    or beyond the slot's frontier, which the position masks of
-    `chunk_attention` / `decode_attention` already exclude (masked
-    scores sit at NEG_INF, so their softmax weight underflows to an
-    exact 0.0 and the outputs stay bit-identical to a contiguous cache).
+    Returns [B, max_blocks*bs, KH, hd].
+
+    Unallocated-entry contract: the allocator (runtime/server.py)
+    assigns a slot's table entries densely from index 0 up to its
+    frontier block and leaves -1 past it, so INVARIANT: every -1 entry
+    maps only to virtual positions at or beyond the slot's kv frontier.
+    The index is clamped (`maximum(bt, 0)`), so -1 entries read
+    physical block 0 — arbitrary garbage owned by someone else — but
+    the position masks of `chunk_attention` / `decode_attention`
+    exclude exactly those positions (masked scores sit at NEG_INF, so
+    their softmax weight underflows to an exact 0.0 and, since
+    0.0 * x == 0.0 for finite x, the outputs stay bit-identical to a
+    contiguous cache).  A poisoned pool block therefore cannot leak
+    into any slot's output through either this gather path or the
+    in-kernel block-table walk of kernels/paged_attention, which never
+    touches -1 entries at all (its loop bound is ceil(kv_len/bs));
+    tests/test_paged_kernel.py pins the no-leak behaviour on both.
     """
     bt = jnp.maximum(block_table, 0)
     NB, bs, KH, hd = ck.shape
@@ -571,24 +650,86 @@ def update_paged_cache(ck: jax.Array, cv: jax.Array, k1: jax.Array,
     overwritten by the next window before the frontier passes it — or
     was dropped right here because its block was never allocated.
     """
-    NB, bs, KH, hd = ck.shape
+    NB, bs = ck.shape[:2]
     B, C = k1.shape[:2]
-    MB = block_table.shape[1]
+    idx = _paged_flat_idx(pos, block_table, C, NB, bs).reshape(-1)
+    return (_paged_scatter(ck, idx, k1.astype(ck.dtype)),
+            _paged_scatter(cv, idx, v1.astype(cv.dtype)))
+
+
+def _paged_flat_idx(pos: jax.Array, block_table: jax.Array, C: int,
+                    num_blocks: int, block_size: int) -> jax.Array:
+    """Flattened-pool row index [B, C] for a C-row write at `pos`
+    through the table; invalid rows (unallocated block / past the
+    table) map to the out-of-range row NB*bs so `.at[].set(mode=drop)`
+    discards them.  Shared by the bf16 and fp8 scatter paths so both
+    obey the same drop contract."""
+    B, MB = block_table.shape
     pos = jnp.asarray(pos)
     if pos.ndim == 0:                     # lockstep decode: same frontier
         pos = jnp.full((B,), pos, jnp.int32)
     vpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]   # [B,C]
-    blk = vpos // bs
+    blk = vpos // block_size
     phys = jnp.take_along_axis(block_table, jnp.clip(blk, 0, MB - 1),
                                axis=1)
     valid = (blk < MB) & (phys >= 0)
-    flat_idx = jnp.where(valid, phys * bs + vpos % bs, NB * bs)
-    ck_flat = ck.reshape(NB * bs, KH, hd).at[flat_idx.reshape(-1)].set(
-        k1.astype(ck.dtype).reshape(B * C, KH, hd), mode="drop")
-    cv_flat = cv.reshape(NB * bs, KH, hd).at[flat_idx.reshape(-1)].set(
-        v1.astype(cv.dtype).reshape(B * C, KH, hd), mode="drop")
-    return (ck_flat.reshape(NB, bs, KH, hd),
-            cv_flat.reshape(NB, bs, KH, hd))
+    return jnp.where(valid, phys * block_size + vpos % block_size,
+                     num_blocks * block_size)
+
+
+def _paged_scatter(pool: jax.Array, flat_idx: jax.Array,
+                   rows: jax.Array) -> jax.Array:
+    """Scatter rows [B, C, ...] into pool [NB, bs, ...] at the
+    flattened row indices [B*C] (dropping out-of-range)."""
+    NB, bs = pool.shape[:2]
+    tail = pool.shape[2:]
+    flat = pool.reshape((NB * bs,) + tail)
+    flat = flat.at[flat_idx].set(rows.reshape((-1,) + tail), mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def update_paged_cache_fp8(cache_layer: Dict[str, jax.Array],
+                           k1: jax.Array, v1: jax.Array, pos: jax.Array,
+                           block_table: jax.Array
+                           ) -> Dict[str, jax.Array]:
+    """fp8 variant of `update_paged_cache` on a single-layer cache dict
+    {"k", "v", "k_scale", "v_scale"}: quantize the step's k/v rows to
+    e4m3 with one f32 scale per token-row per kv-head
+    (te/fp8.quantize_rowwise) and scatter codes + scales through the
+    same flat-index/drop contract."""
+    from repro.te import fp8 as te_fp8
+    ck = cache_layer["k"]
+    NB, bs = ck.shape[:2]
+    C = k1.shape[1]
+    kq, k_sc = te_fp8.quantize_rowwise(k1, ck.dtype)
+    vq, v_sc = te_fp8.quantize_rowwise(v1, ck.dtype)
+    idx = _paged_flat_idx(pos, block_table, C, NB, bs).reshape(-1)
+    return {"k": _paged_scatter(ck, idx, kq),
+            "v": _paged_scatter(cache_layer["v"], idx, vq),
+            "k_scale": _paged_scatter(cache_layer["k_scale"], idx, k_sc),
+            "v_scale": _paged_scatter(cache_layer["v_scale"], idx, v_sc)}
+
+
+def gather_paged_cache_fp8(cache_layer: Dict[str, jax.Array],
+                           block_table: jax.Array,
+                           out_dtype=jnp.bfloat16
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Materialize + dequantize each slot's virtual view from an fp8
+    single-layer cache dict.  The dequant is elementwise
+    `(codes.astype(f32) * scale).astype(out_dtype)` — the exact op the
+    fp8 kernel applies in-tile, so kernel-vs-gather parity stays
+    bitwise on fp8 pools too.  Same -1 clamp/mask contract as
+    `gather_paged_cache`."""
+    bt = jnp.maximum(block_table, 0)
+    NB, bs, KH, hd = cache_layer["k"].shape
+    B, MB = bt.shape
+
+    def dq(pool, scale):
+        x = (pool[bt].astype(jnp.float32) * scale[bt]).astype(out_dtype)
+        return x.reshape(B, MB * bs, KH, hd)
+
+    return (dq(cache_layer["k"], cache_layer["k_scale"]),
+            dq(cache_layer["v"], cache_layer["v_scale"]))
 
 
 def copy_paged_block(ck: jax.Array, cv: jax.Array, src: jax.Array,
@@ -604,6 +745,89 @@ def copy_paged_block(ck: jax.Array, cv: jax.Array, src: jax.Array,
     """
     return (ck.at[:, dst].set(ck[:, src]),
             cv.at[:, dst].set(cv[:, src]))
+
+
+# ----------------------------------------------------------------------
+# fused paged kernels (kernels/paged_attention.py) + tp dispatch
+# ----------------------------------------------------------------------
+
+def _shard_map():
+    try:
+        from jax.experimental.shard_map import shard_map
+    except ImportError:                                # newer layouts
+        from jax.experimental import shard_map as _sm
+        shard_map = _sm.shard_map
+    return shard_map
+
+
+def _paged_kernel_call(fn, q, ck, cv, block_table, lens, k_scale,
+                       v_scale, mesh, mesh_axis):
+    """Run a paged kernel directly, or under shard_map over the kv-head
+    axis when a mesh is given.  Heads shard over `mesh_axis` exactly
+    when KH divides by the axis size (mirroring plans.ServingPlan);
+    otherwise every operand is replicated and the kernel runs whole on
+    each device — either way the per-device math is the same mul+reduce
+    the single-device path runs, so outputs stay bitwise identical."""
+    if mesh is None:
+        return fn(q, ck, cv, block_table, lens, k_scale, v_scale)
+    from jax.sharding import PartitionSpec as P
+    tp = mesh.shape[mesh_axis]
+    ax = mesh_axis if ck.shape[2] % tp == 0 else None
+    hspec = P(None, None, ax, None)
+    in_specs = [hspec, hspec, hspec, P(None, None), P(None)]
+    args = [q, ck, cv, block_table, lens]
+    if k_scale is not None:
+        in_specs += [hspec, hspec]
+        args += [k_scale, v_scale]
+
+    def inner(*a):
+        return fn(a[0], a[1], a[2], a[3], a[4],
+                  a[5] if len(a) > 5 else None,
+                  a[6] if len(a) > 6 else None)
+
+    return _shard_map()(inner, mesh=mesh, in_specs=tuple(in_specs),
+                        out_specs=hspec, check_rep=False)(*args)
+
+
+def paged_decode_attention(q: jax.Array, ck: jax.Array, cv: jax.Array,
+                           block_table: jax.Array, kv_len: jax.Array, *,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
+                           mesh=None, mesh_axis: Optional[str] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Fused paged decode: block-table walk inside the Pallas kernel,
+    bitwise-equal to gather_paged_cache(+_fp8) -> decode_attention."""
+    from repro.kernels import paged_attention as pk
+
+    def fn(q_, ck_, cv_, bt_, lens_, ks_, vs_):
+        return pk.paged_decode(q_, ck_, cv_, bt_, lens_, k_scale=ks_,
+                               v_scale=vs_, interpret=interpret)
+
+    lens = jnp.broadcast_to(jnp.asarray(kv_len), (q.shape[0],)
+                            ).astype(jnp.int32)
+    return _paged_kernel_call(fn, q, ck, cv, block_table, lens,
+                              k_scale, v_scale, mesh, mesh_axis)
+
+
+def paged_chunk_attention(q: jax.Array, ck: jax.Array, cv: jax.Array,
+                          block_table: jax.Array, pos: jax.Array, *,
+                          k_scale: Optional[jax.Array] = None,
+                          v_scale: Optional[jax.Array] = None,
+                          mesh=None, mesh_axis: Optional[str] = None,
+                          interpret: Optional[bool] = None) -> jax.Array:
+    """Fused paged chunk attention; `pos` [B] is each slot's cache
+    length before the chunk (same contract as chunk_attention with
+    q_positions = pos[:, None] + arange(C))."""
+    from repro.kernels import paged_attention as pk
+
+    def fn(q_, ck_, cv_, bt_, pos_, ks_, vs_):
+        return pk.paged_chunk(q_, ck_, cv_, bt_, pos_, k_scale=ks_,
+                              v_scale=vs_, interpret=interpret)
+
+    pos = jnp.broadcast_to(jnp.asarray(pos), (q.shape[0],)
+                           ).astype(jnp.int32)
+    return _paged_kernel_call(fn, q, ck, cv, block_table, pos,
+                              k_scale, v_scale, mesh, mesh_axis)
 
 
 def attention_flops(B: int, Sq: int, Sk: int, H: int, hd: int,

@@ -57,6 +57,26 @@ def mlp(cfg, p, x: jax.Array, *, groups: int = 0) -> jax.Array:
     return constrain(y, ("batch", "seq", "embed"))
 
 
+def mlp_fp8(cfg, p, q8, x: jax.Array) -> jax.Array:
+    """fp8 serving variant of `mlp`: matmuls through weights
+    pre-quantized by te/linear.quantize_serving_params with per-call
+    activation scales.  Biases stay bf16 in `p`.  tp=1 serving only,
+    so there is no grouped-reduction path here."""
+    from repro.te import linear as te_linear
+    dt = x.dtype
+    up = te_linear.fp8_serving_dot(x, q8["w_up"])
+    if cfg.use_bias:
+        up = up + p["b_up"].astype(dt)
+    gate = te_linear.fp8_serving_dot(x, q8["w_gate"]) \
+        if "w_gate" in q8 else None
+    h = activation(cfg, up, gate)
+    h = constrain(h, ("batch", None, "mlp"))
+    y = te_linear.fp8_serving_dot(h, q8["w_down"])
+    if cfg.use_bias:
+        y = y + p["b_down"].astype(dt)
+    return constrain(y, ("batch", "seq", "embed"))
+
+
 def mlp_flops(d: int, f: int, gated: bool) -> float:
     """Matmul FLOPs per token, fwd only."""
     n_mats = 3 if gated else 2

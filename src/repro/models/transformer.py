@@ -194,7 +194,7 @@ def serving_det_groups(cfg) -> Tuple[int, int]:
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
                paged: bool = False, block_size: int = 16,
                num_blocks: Optional[int] = None,
-               sharding=None) -> Params:
+               sharding=None, fp8_kv: bool = False) -> Params:
     """Contiguous cache [L, B, T, KH, hd] or, with ``paged=True``, a
     shared block pool [L, num_blocks, block_size, KH, hd] addressed
     through a per-slot block table (see attention.gather_paged_cache).
@@ -202,16 +202,22 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
     (batch * ceil(max_len / block_size) blocks); servers pass a smaller
     pool to actually share memory across slots.  ``sharding`` (a
     NamedSharding; sharding/plans.ServingPlan.cache_sharding) lays the
-    k/v leaves out over a serving mesh at init — the KV-head dim sits
-    at index 3 of both layouts — instead of on the default device."""
+    cache leaves out over a serving mesh at init — the KV-head dim sits
+    at index 3 of every layout, including the fp8 scale leaves —
+    instead of on the default device.  ``fp8_kv`` (paged only) stores
+    e4m3 codes + per-row f32 scales (attention.init_paged_kv_cache)."""
     L = cfg.num_layers
     KH, hd = cfg.num_kv_heads, cfg.head_dim
     if paged:
         if num_blocks is None:
             num_blocks = batch * -(-max_len // block_size)
         cache = attn.init_paged_kv_cache(num_blocks, block_size, KH, hd,
-                                         layers=L, dtype=dtype)
+                                         layers=L, dtype=dtype,
+                                         fp8=fp8_kv)
     else:
+        if fp8_kv:
+            raise NotImplementedError(
+                "fp8_kv requires the paged cache layout")
         cache = {
             "k": jnp.zeros((L, batch, max_len, KH, hd), dtype),
             "v": jnp.zeros((L, batch, max_len, KH, hd), dtype),
@@ -221,8 +227,100 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
     return cache
 
 
+def _cache_attend(q, k1, v1, cl, pos, positions, block_table, *,
+                  decode: bool, kernel: bool, mesh, mesh_axis):
+    """Write a window's k/v into one layer's cache slice `cl` (dict of
+    leaves: contiguous {"k","v"}, paged bf16 {"k","v"}, or paged fp8
+    {"k","v","k_scale","v_scale"} — detected by key) and attend over
+    the result.  ``kernel=True`` routes the paged read through the
+    fused Pallas block-table kernels (attention.paged_*_attention,
+    bitwise-equal to the gather path); ``mesh`` runs them under
+    shard_map over the kv-head axis.  Returns (o, new_cl)."""
+    if block_table is None:
+        ck, cv = attn.update_cache(cl["k"], cl["v"], k1, v1, pos)
+        o = (attn.decode_attention(q, ck, cv, jnp.asarray(pos) + 1)
+             if decode else attn.chunk_attention(q, ck, cv, positions))
+        return o, {"k": ck, "v": cv}
+    if "k_scale" in cl:
+        cl = attn.update_paged_cache_fp8(cl, k1, v1, pos, block_table)
+        scales = (cl["k_scale"], cl["v_scale"])
+    else:
+        ck, cv = attn.update_paged_cache(cl["k"], cl["v"], k1, v1, pos,
+                                         block_table)
+        cl = {"k": ck, "v": cv}
+        scales = (None, None)
+    if kernel:
+        if decode:
+            o = attn.paged_decode_attention(
+                q, cl["k"], cl["v"], block_table, jnp.asarray(pos) + 1,
+                k_scale=scales[0], v_scale=scales[1], mesh=mesh,
+                mesh_axis=mesh_axis)
+        else:
+            o = attn.paged_chunk_attention(
+                q, cl["k"], cl["v"], block_table, pos,
+                k_scale=scales[0], v_scale=scales[1], mesh=mesh,
+                mesh_axis=mesh_axis)
+    else:
+        if scales[0] is None:
+            kg, vg = attn.gather_paged_cache(cl["k"], cl["v"],
+                                             block_table)
+        else:
+            kg, vg = attn.gather_paged_cache_fp8(cl, block_table,
+                                                 out_dtype=q.dtype)
+        o = (attn.decode_attention(q, kg, vg, jnp.asarray(pos) + 1)
+             if decode else attn.chunk_attention(q, kg, vg, positions))
+    return o, cl
+
+
+def _serving_scan(cfg, params, cache, x, pos, positions, block_table, *,
+                  decode: bool, kernel: bool, quant, mesh, mesh_axis):
+    """Scan layers (+ their cache slices, + optionally their
+    pre-quantized fp8 weight slices) for the serving steps.  The cache
+    travels as a pytree dict through scan's xs, so the same scan serves
+    the contiguous, paged-bf16 and paged-fp8 layouts."""
+    ga, gm = serving_det_groups(cfg)
+
+    def body(x, inp):
+        if quant is None:
+            lp, cl = inp
+            qlp = None
+        else:
+            lp, qlp, cl = inp
+        h = apply_norm(cfg, x, lp["ln1"])
+        if qlp is None:
+            q, k1, v1 = attn.qkv_project(cfg, lp["attn"], h)
+        else:
+            q, k1, v1 = attn.qkv_project_fp8(cfg, lp["attn"],
+                                             qlp["attn"], h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k1 = apply_rope(k1, positions, cfg.rope_theta)
+        o, cl = _cache_attend(q, k1, v1, cl, pos, positions, block_table,
+                              decode=decode, kernel=kernel, mesh=mesh,
+                              mesh_axis=mesh_axis)
+        if qlp is None:
+            x = x + attn.out_project(lp["attn"], o, groups=ga)
+        else:
+            x = x + attn.out_project_fp8(lp["attn"], qlp["attn"], o)
+        h = apply_norm(cfg, x, lp["ln2"])
+        if cfg.family == "moe":
+            y, _ = moe_mod.moe_mlp(cfg, lp["moe"], h)
+        elif qlp is None:
+            y = mlp_mod.mlp(cfg, lp["mlp"], h, groups=gm)
+        else:
+            y = mlp_mod.mlp_fp8(cfg, lp["mlp"], qlp["mlp"], h)
+        return x + y, cl
+
+    xs = ((params["layers"], cache) if quant is None
+          else (params["layers"], quant["layers"], cache))
+    x, new_cache = lax.scan(body, x, xs)
+    x = apply_norm(cfg, x, params["final_norm"])
+    return x, new_cache
+
+
 def decode_step(cfg, params, cache: Params, token: jax.Array,
-                pos: jax.Array, block_table: Optional[jax.Array] = None
+                pos: jax.Array, block_table: Optional[jax.Array] = None,
+                *, kernel: bool = False, quant: Optional[Params] = None,
+                mesh=None, mesh_axis: Optional[str] = None
                 ) -> Tuple[jax.Array, Params]:
     """One decode step. token [B], pos scalar int32 (current length).
 
@@ -231,89 +329,49 @@ def decode_step(cfg, params, cache: Params, token: jax.Array,
     ``block_table`` the cache is a paged block pool and the read/write
     paths go through the table (attention.update_paged_cache /
     gather_paged_cache); outputs are bit-identical to the contiguous
-    layout.
+    layout.  ``kernel=True`` reads through the fused Pallas block-table
+    kernel instead of materializing the gathered view (still
+    bit-identical on bf16 pools); ``quant`` (te/linear.
+    quantize_serving_params output) routes the linears through
+    pre-quantized fp8 weights.
     """
     B = token.shape[0]
-    ga, gm = serving_det_groups(cfg)
     x = params["embed"].astype(jnp.bfloat16)[token][:, None, :]  # [B,1,d]
     x = constrain(x, ("batch", None, "embed"))
     pos = jnp.asarray(pos)
     positions = (pos[:, None] if pos.ndim == 1
                  else jnp.full((B, 1), pos, jnp.int32))
-
-    def body(x, inp):
-        lp, ck, cv = inp
-        h = apply_norm(cfg, x, lp["ln1"])
-        q, k1, v1 = attn.qkv_project(cfg, lp["attn"], h)
-        q = apply_rope(q, positions, cfg.rope_theta)
-        k1 = apply_rope(k1, positions, cfg.rope_theta)
-        if block_table is None:
-            ck, cv = attn.update_cache(ck, cv, k1, v1, pos)
-            kg, vg = ck, cv
-        else:
-            ck, cv = attn.update_paged_cache(ck, cv, k1, v1, pos,
-                                             block_table)
-            kg, vg = attn.gather_paged_cache(ck, cv, block_table)
-        o = attn.decode_attention(q, kg, vg, pos + 1)
-        x = x + attn.out_project(lp["attn"], o, groups=ga)
-        h = apply_norm(cfg, x, lp["ln2"])
-        if cfg.family == "moe":
-            y, _ = moe_mod.moe_mlp(cfg, lp["moe"], h)
-        else:
-            y = mlp_mod.mlp(cfg, lp["mlp"], h, groups=gm)
-        return x + y, (ck, cv)
-
-    x, (new_k, new_v) = lax.scan(
-        body, x, (params["layers"], cache["k"], cache["v"]))
-    x = apply_norm(cfg, x, params["final_norm"])
+    x, new_cache = _serving_scan(cfg, params, cache, x, pos, positions,
+                                 block_table, decode=True, kernel=kernel,
+                                 quant=quant, mesh=mesh,
+                                 mesh_axis=mesh_axis)
     logits = logits_fn(cfg, params, x)[:, 0]
-    return logits, {"k": new_k, "v": new_v}
+    return logits, new_cache
 
 
 def _chunk_fwd(cfg, params, cache: Params, tokens: jax.Array,
-               pos: jax.Array, block_table: Optional[jax.Array]
+               pos: jax.Array, block_table: Optional[jax.Array], *,
+               kernel: bool = False, quant: Optional[Params] = None,
+               mesh=None, mesh_axis: Optional[str] = None
                ) -> Tuple[jax.Array, Params]:
     """Shared serving forward over a [B, C] token window written into
     the KV cache at [pos, pos+C): the body of both `chunk_step` (which
     reads out the last valid row) and `verify_step` (which reads out
     every row).  Returns (final hidden [B, C, d], cache)."""
     B, C = tokens.shape
-    ga, gm = serving_det_groups(cfg)
     x = params["embed"].astype(jnp.bfloat16)[tokens]          # [B,C,d]
     x = constrain(x, ("batch", None, "embed"))
     positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
-
-    def body(x, inp):
-        lp, ck, cv = inp
-        h = apply_norm(cfg, x, lp["ln1"])
-        q, k, v = attn.qkv_project(cfg, lp["attn"], h)
-        q = apply_rope(q, positions, cfg.rope_theta)
-        k = apply_rope(k, positions, cfg.rope_theta)
-        if block_table is None:
-            ck, cv = attn.update_cache(ck, cv, k, v, pos)
-            kg, vg = ck, cv
-        else:
-            ck, cv = attn.update_paged_cache(ck, cv, k, v, pos,
-                                             block_table)
-            kg, vg = attn.gather_paged_cache(ck, cv, block_table)
-        o = attn.chunk_attention(q, kg, vg, positions)
-        x = x + attn.out_project(lp["attn"], o, groups=ga)
-        h = apply_norm(cfg, x, lp["ln2"])
-        if cfg.family == "moe":
-            y, _ = moe_mod.moe_mlp(cfg, lp["moe"], h)
-        else:
-            y = mlp_mod.mlp(cfg, lp["mlp"], h, groups=gm)
-        return x + y, (ck, cv)
-
-    x, (new_k, new_v) = lax.scan(
-        body, x, (params["layers"], cache["k"], cache["v"]))
-    x = apply_norm(cfg, x, params["final_norm"])
-    return x, {"k": new_k, "v": new_v}
+    return _serving_scan(cfg, params, cache, x, pos, positions,
+                         block_table, decode=False, kernel=kernel,
+                         quant=quant, mesh=mesh, mesh_axis=mesh_axis)
 
 
 def chunk_step(cfg, params, cache: Params, tokens: jax.Array,
                pos: jax.Array, n_tokens: jax.Array,
-               block_table: Optional[jax.Array] = None
+               block_table: Optional[jax.Array] = None, *,
+               kernel: bool = False, quant: Optional[Params] = None,
+               mesh=None, mesh_axis: Optional[str] = None
                ) -> Tuple[jax.Array, Params]:
     """One chunked-prefill/decode step for a batch of server slots.
 
@@ -337,7 +395,9 @@ def chunk_step(cfg, params, cache: Params, tokens: jax.Array,
     matter how prompt lengths are distributed.
     """
     B, C = tokens.shape
-    x, cache = _chunk_fwd(cfg, params, cache, tokens, pos, block_table)
+    x, cache = _chunk_fwd(cfg, params, cache, tokens, pos, block_table,
+                          kernel=kernel, quant=quant, mesh=mesh,
+                          mesh_axis=mesh_axis)
     last = jnp.clip(n_tokens - 1, 0, C - 1)                   # [B]
     h_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # [B,1,d]
     logits = logits_fn(cfg, params, h_last)[:, 0]
@@ -345,7 +405,9 @@ def chunk_step(cfg, params, cache: Params, tokens: jax.Array,
 
 
 def verify_step(cfg, params, cache: Params, tokens: jax.Array,
-                pos: jax.Array, block_table: Optional[jax.Array] = None
+                pos: jax.Array, block_table: Optional[jax.Array] = None,
+                *, kernel: bool = False, quant: Optional[Params] = None,
+                mesh=None, mesh_axis: Optional[str] = None
                 ) -> Tuple[jax.Array, Params]:
     """Speculative-decode verify: score a [B, C] window (row 0 = each
     slot's current token, rows 1..C-1 = draft tokens) in ONE fixed-shape
@@ -366,7 +428,9 @@ def verify_step(cfg, params, cache: Params, tokens: jax.Array,
 
     Returns (preds [B, C] int32 greedy next-token ids, cache).
     """
-    x, cache = _chunk_fwd(cfg, params, cache, tokens, pos, block_table)
+    x, cache = _chunk_fwd(cfg, params, cache, tokens, pos, block_table,
+                          kernel=kernel, quant=quant, mesh=mesh,
+                          mesh_axis=mesh_axis)
     logits = logits_fn(cfg, params, x)                        # [B,C,V]
     return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 

@@ -61,6 +61,23 @@ rejected suffix's cache writes are rolled back host-side by
 truncating the slot's block-table frontier.  One extra compiled
 program total: {chunk_step, decode_span, verify_step}.
 
+``kernel=True`` (default off; requires ``paged``) reads the KV pool
+through the fused Pallas block-table kernels of
+kernels/paged_attention.py instead of materializing each slot's
+gathered view: the block-table walk happens inside the kernel, only
+the ``ceil(kv_len/block_size)`` valid blocks move, and on bf16 pools
+the greedy outputs are **bit-identical** to ``kernel=False`` — the
+gather path stays as the always-on A/B parity oracle.
+``fp8_kv=True`` (requires ``paged``) stores the pool as e4m3 codes
+plus per-token-row f32 scales (halving per-device KV bytes + scale
+overhead; see core/roofline.paged_decode_kv_bytes for the modeled
+bytes/step), and ``fp8_linear=True`` (tp=1, non-MoE) pre-quantizes
+the layer weights once at init and serves every matmul through
+te/linear.fp8_serving_dot.  The fp8 options change numerics within
+documented tolerance (tests/test_paged_kernel.py); kernel-vs-gather
+stays bitwise even on fp8 pools because both dequantize with the
+same elementwise op.
+
 ``tp=N`` (default 1) serves **tensor-parallel** over an N-device mesh
 (launch/mesh.make_tp_mesh; sharding/plans.ServingPlan documents the
 mesh/axis contract): weights shard head-wise / column-row-wise, the KV
@@ -106,6 +123,7 @@ from repro.runtime import spec_decode as spec
 from repro.runtime.prefix_cache import BlockPool, RadixPrefixCache
 from repro.sharding import axes as axes_mod
 from repro.sharding import plans as plans_mod
+from repro.te import linear as te_linear
 
 Params = Any
 
@@ -241,6 +259,8 @@ class ChunkedServer:
                  eos_id: Optional[int] = None,
                  spec_decode: int = 0,
                  spec_n_ctx: int = spec.DEFAULT_N_CTX,
+                 kernel: bool = False, fp8_kv: bool = False,
+                 fp8_linear: bool = False,
                  tp: int = 1, mesh=None):
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
@@ -250,6 +270,19 @@ class ChunkedServer:
         self.span = span
         self.paged = paged
         self.eos_id = eos_id
+        # -- serving hot-path variants (models/transformer fwd kwargs):
+        # kernel=True reads paged KV through the fused Pallas
+        # block-table kernels (kernels/paged_attention; bitwise-equal
+        # to the gather path on bf16 pools, so kernel=False stays the
+        # always-available A/B parity oracle); fp8_kv stores the pool
+        # as e4m3 + per-row scales; fp8_linear pre-quantizes the layer
+        # weights once and serves matmuls through te/linear.
+        self.kernel = bool(kernel)
+        self.fp8_kv = bool(fp8_kv)
+        self.fp8_linear = bool(fp8_linear)
+        if self.kernel or self.fp8_kv:
+            assert paged, \
+                "kernel=/fp8_kv= require the paged KV pool (paged=True)"
         # -- tensor-parallel mesh (sharding/plans.ServingPlan contract):
         # weights head-wise/column-row-wise, KV cache along the KV-head
         # axis, every scheduler operand (tokens, positions, block
@@ -284,6 +317,14 @@ class ChunkedServer:
             self._repl = self._plan.replicated
             params = jax.device_put(params, self._param_sh)
         self.params = params
+        self._quant = None
+        if self.fp8_linear:
+            assert self.tp == 1, \
+                ("fp8_linear serving is tp=1-only: the fp8 path has no "
+                 "grouped order-deterministic reduction structure")
+            assert cfg.family != "moe", \
+                "fp8_linear serving is dense/vlm-only for now"
+            self._quant = te_linear.quantize_serving_params(self.params)
         self.spec_decode = int(spec_decode)
         assert self.spec_decode >= 0
         if self.spec_decode and not paged:
@@ -303,7 +344,8 @@ class ChunkedServer:
                 cfg, batch_slots, max_len, paged=True,
                 block_size=block_size, num_blocks=self.num_blocks,
                 sharding=(self._cache_sh if self._plan is not None
-                          else None))
+                          else None),
+                fp8_kv=self.fp8_kv)
             self.block_table = np.full((batch_slots, self.max_blocks),
                                        -1, np.int32)
             self.pool = BlockPool(self.num_blocks)
@@ -393,6 +435,21 @@ class ChunkedServer:
             return contextlib.nullcontext()
         return axes_mod.use_rules(self.mesh, self._plan.act_rules)
 
+    def _fwd_kw(self) -> Dict[str, Any]:
+        """Transformer forward kwargs for this server's hot-path
+        variant (kernel/quant/mesh), closed over by the jitted work
+        units — the pre-quantized fp8 weights are jit constants, which
+        is exactly right for frozen serving weights."""
+        kw: Dict[str, Any] = {}
+        if self.kernel:
+            kw["kernel"] = True
+            if self.mesh is not None:
+                kw["mesh"] = self.mesh
+                kw["mesh_axis"] = self.mesh.axis_names[0]
+        if self._quant is not None:
+            kw["quant"] = self._quant
+        return kw
+
     def _device_block_table(self) -> np.ndarray:
         """Snapshot of the block table as a jit operand (fixed shape;
         a dummy for the contiguous layout so signatures don't vary)."""
@@ -410,7 +467,7 @@ class ChunkedServer:
                                cur_tok[:, None], tokens_host)
             logits, cache = transformer.chunk_step(
                 self.cfg, params, cache, tokens, pos, n_tokens,
-                block_table if self.paged else None)
+                block_table if self.paged else None, **self._fwd_kw())
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             cur_tok = jnp.where(emit, nxt, cur_tok)
             row = jnp.arange(B)
@@ -434,7 +491,8 @@ class ChunkedServer:
         def step(carry, _):
             cache, tok, pos, out_buf, out_len, active = carry
             logits, cache = transformer.decode_step(
-                self.cfg, params, cache, tok, pos, bt)
+                self.cfg, params, cache, tok, pos, bt,
+                **self._fwd_kw())
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             idx = jnp.clip(out_len, 0, out_buf.shape[1] - 1)
             out_buf = out_buf.at[row, idx].set(
@@ -462,7 +520,8 @@ class ChunkedServer:
                 self.cfg, params, cache, table, cur_tok, out_buf, pos,
                 out_len, active, max_new,
                 block_table if self.paged else None,
-                max_len=self.max_len, eos_id=self.eos_id)
+                max_len=self.max_len, eos_id=self.eos_id,
+                fwd_kw=self._fwd_kw())
 
     def compile_counts(self) -> Dict[str, int]:
         """Programs compiled per work unit — O(1) by construction."""

@@ -143,7 +143,8 @@ def spec_decode_step(cfg, params, cache, table: jax.Array,
                      pos: jax.Array, out_len: jax.Array,
                      active: jax.Array, max_new: jax.Array,
                      block_table: Optional[jax.Array], *,
-                     max_len: int, eos_id: Optional[int]
+                     max_len: int, eos_id: Optional[int],
+                     fwd_kw: Optional[dict] = None
                      ) -> Tuple[jax.Array, ...]:
     """One draft → verify → accept step for every decoding slot.
 
@@ -174,7 +175,8 @@ def spec_decode_step(cfg, params, cache, table: jax.Array,
     drafts = propose(table, cur_tok, out_buf, out_len)        # [B, K]
     window = jnp.concatenate([cur_tok[:, None], drafts], axis=1)
     preds, cache = api.verify_step(cfg, params, cache, window, pos,
-                                   block_table)               # [B, K+1]
+                                   block_table,
+                                   **(fwd_kw or {}))          # [B, K+1]
 
     n_acc = accept_greedy(drafts, preds)
     budget = jnp.maximum(

@@ -103,3 +103,59 @@ def linear_reference(params: Params, x: jax.Array) -> jax.Array:
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y
+
+
+# ----------------------------------------------------------------------
+# serving-side fp8 linears: weights quantized once, activations per call
+# ----------------------------------------------------------------------
+#
+# te_linear re-quantizes the weight every call because training updates
+# it; serving weights are frozen, so the server quantizes the whole
+# stacked [L, ...] parameter tree once at init (per-layer per-tensor
+# scales — the TE recipe degenerates to a single amax when the history
+# never changes) and the hot path only quantizes the activation.  The
+# payoff on a bandwidth-bound decode step is the fp8 weight *storage*:
+# HBM reads per matmul halve vs bf16, which is the regime where the
+# paper's TE measurements (Fig. 3/4) show fp8 winning.
+
+def _quantize_leaf(w: jax.Array) -> Params:
+    """e4m3-quantize one stacked weight [L, ...] with a per-layer
+    per-tensor scale (shape [L, 1, ...] so lax.scan slices it)."""
+    a = jnp.max(jnp.abs(w.astype(jnp.float32)),
+                axis=tuple(range(1, w.ndim)), keepdims=True)
+    s = fp8.compute_scale(a, fp8.E4M3)
+    return {"q": fp8.quantize(w, s, fp8.E4M3), "s": s}
+
+
+def quantize_serving_params(params: Params) -> Params:
+    """Pre-quantize the per-layer attention + MLP weights of a stacked
+    transformer param tree for fp8 serving.  Returns {"layers": {...}}
+    mirroring params["layers"] so it scans alongside it; biases and
+    norms stay bf16 in the original tree."""
+    layers = params["layers"]
+    quant = {"attn": {n: _quantize_leaf(layers["attn"][n])
+                      for n in ("wq", "wk", "wv", "wo")},
+             "mlp": {n: _quantize_leaf(layers["mlp"][n])
+                     for n in ("w_up", "w_gate", "w_down")
+                     if n in layers["mlp"]}}
+    return {"layers": quant}
+
+
+def fp8_serving_dot(x: jax.Array, qleaf: Params, *,
+                    x_contract_ndim: int = 1,
+                    w_contract_ndim: int = 1) -> jax.Array:
+    """x (trailing `x_contract_ndim` dims) @ pre-quantized weight
+    (leading `w_contract_ndim` dims), with a fresh per-call activation
+    scale.  qleaf is one per-layer slice of quantize_serving_params
+    output: codes [*w_shape], scale broadcastable to a scalar."""
+    wq = qleaf["q"]
+    batch = x.shape[:x.ndim - x_contract_ndim]
+    k = 1
+    for d in wq.shape[:w_contract_ndim]:
+        k *= d
+    out_dims = wq.shape[w_contract_ndim:]
+    sx = fp8.compute_scale(fp8.amax(x), fp8.E4M3)
+    xq = fp8.quantize(x.reshape(-1, k), sx, fp8.E4M3)
+    y = fp8.fp8_dot(xq, sx, wq.reshape(k, -1), qleaf["s"].reshape(()),
+                    out_dtype=x.dtype)
+    return y.reshape(batch + out_dims)

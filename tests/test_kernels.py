@@ -125,3 +125,63 @@ def test_single_tile_mma_analog():
     got = single_tile_matmul(a, b)
     np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
                                rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# decode-tile audit: explicit oversize tiles are an error, not a clamp
+# ----------------------------------------------------------------------
+
+def test_matmul_oversize_tile_raises():
+    """A tile strictly larger than its operand dimension must raise —
+    a silent clamp hides a mis-sized launch (the decode-tile audit)."""
+    a = jnp.asarray(RNG.standard_normal((16, 32)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((32, 16)), jnp.float32)
+    with pytest.raises(ValueError, match="exceeds the operand"):
+        ops.matmul(a, b, bm=32, bn=16, bk=32)          # bm > m
+    with pytest.raises(ValueError, match="exceeds the operand"):
+        ops.matmul(a, b, bm=16, bn=16, bk=64)          # bk > k
+
+
+def test_flash_attention_oversize_tile_raises():
+    B, S, H, KH, hd = 1, 32, 4, 2, 16
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, KH, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, KH, hd)), jnp.float32)
+    with pytest.raises(ValueError, match="exceeds the operand"):
+        ops.flash_attention(q, k, v, bq=128)           # bq > S
+    with pytest.raises(ValueError, match="exceeds the operand"):
+        ops.flash_attention(q, k, v, bk=64)            # bk > S
+
+
+def test_flash_attention_decode_length_auto_tile():
+    """Decode-sized sequences (S < 128) get an S-sized default tile:
+    no explicit tiles needed, no error, right answer."""
+    B, S, H, KH, hd = 2, 16, 4, 2, 32
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, KH, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, KH, hd)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_smaller_explicit_tile_still_fits():
+    """Explicit tiles SMALLER than the operand stay legal (and are
+    divisor-fitted), so existing callers keep working."""
+    a = jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32)
+    got = ops.matmul(a, b, bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul(a, b)),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_tropical_pipelined_oversize_tile_raises():
+    a = jnp.asarray(RNG.integers(-5, 5, (16, 16)), jnp.int32)
+    b = jnp.asarray(RNG.integers(-5, 5, (16, 16)), jnp.int32)
+    with pytest.raises(ValueError, match="exceeds the operand"):
+        ops.tropical_matmul(a, b, bm=32)
+    af = jnp.asarray(RNG.standard_normal((16, 16)), jnp.float32)
+    bf = jnp.asarray(RNG.standard_normal((16, 16)), jnp.float32)
+    with pytest.raises(ValueError, match="exceeds the operand"):
+        ops.pipelined_matmul(af, bf, bn=64)

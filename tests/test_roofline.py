@@ -125,3 +125,29 @@ def test_roofline_row_format():
     assert rf.name in row and rf.dominant in row
     assert len(roofline.Roofline.header().split(",")) == \
         len(row.split(","))
+
+
+def test_paged_decode_kv_bytes_ratios():
+    """Pin the modeled byte ratios of the three paged decode read
+    paths (core/roofline.paged_decode_kv_bytes) that BENCH_serving's
+    `modeled_decode_speedup` reports."""
+    from repro.core import roofline
+    kw = dict(block_size=16, max_blocks=8, kv_heads=4, head_dim=64)
+    full = 16 * 8
+    r = roofline.paged_decode_speedup(full, **kw)
+    # at full context the gather's 3 passes over the full extent vs
+    # the kernel's single pass over the (all-valid) blocks = exactly 3x
+    assert r["kernel_speedup"] == 3.0
+    # fp8 kernel bytes per token-row per head: hd + 4 vs 2*hd
+    assert r["fp8_vs_kernel_bytes"] == (64 + 4) / (2 * 64) == 0.53125
+    # at quarter context the kernel touches 1/4 of the blocks: 12x
+    r4 = roofline.paged_decode_speedup(full // 4, **kw)
+    assert r4["kernel_speedup"] == 12.0
+    # gather traffic is context-independent (that's the indictment)
+    assert r4["gather_bytes"] == r["gather_bytes"]
+    # partial last block rounds UP to a whole block on the kernel path
+    ra = roofline.paged_decode_kv_bytes(17, mode="kernel", **kw)
+    rb = roofline.paged_decode_kv_bytes(32, mode="kernel", **kw)
+    assert ra == rb
+    with pytest.raises(ValueError):
+        roofline.paged_decode_kv_bytes(8, mode="nope", **kw)
