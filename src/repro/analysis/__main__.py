@@ -1,0 +1,86 @@
+"""CLI: ``python -m repro.analysis [--strict] [--report out.json]``.
+
+Runs the three analyzer layers over the repo and prints findings;
+exit 1 on any error-severity finding (and on warnings under
+``--strict``).  ``--suppress RULE`` moves a rule's findings into the
+report's ``suppressed`` section without failing the run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import ast_lint, jaxpr_check, kernel_lint
+from repro.analysis.report import RULES, Report
+
+LAYERS = ("ast", "kernel", "jaxpr")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Serving-contract static analyzer "
+                    "(jaxpr + Pallas + AST layers)")
+    p.add_argument("--strict", action="store_true",
+                   help="fail on warnings too, not just errors")
+    p.add_argument("--report", metavar="PATH",
+                   help="write the JSON report here")
+    p.add_argument("--suppress", action="append", default=[],
+                   metavar="RULE", help="suppress a rule id (repeatable)")
+    p.add_argument("--layer", action="append", choices=LAYERS,
+                   default=[], metavar="LAYER",
+                   help=f"run only these layers {LAYERS} (repeatable; "
+                        f"default: all)")
+    p.add_argument("--max-combos", type=int, default=None,
+                   help="cap the jaxpr layer's serving flag matrix")
+    p.add_argument("--repo-root", default=".",
+                   help="repo root for the AST layer (default: cwd)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule registry and exit")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for rule, (sev, desc) in RULES.items():
+            print(f"{rule}  [{sev:7s}]  {desc}")
+        return 0
+
+    layers = args.layer or list(LAYERS)
+    report = Report(suppress=args.suppress)
+    if "ast" in layers:
+        print("[analysis] layer 3: AST lint "
+              "(runtime/ + models/ hot paths)", flush=True)
+        ast_lint.run(report, repo_root=args.repo_root)
+    if "kernel" in layers:
+        print("[analysis] layer 2: Pallas launch lint "
+              "(kernels/ workload sweep)", flush=True)
+        kernel_lint.run(report)
+    if "jaxpr" in layers:
+        print("[analysis] layer 1: jaxpr contracts "
+              "(serving flag matrix)", flush=True)
+        jaxpr_check.run(report, max_combos=args.max_combos)
+
+    for f in report.findings:
+        print(f)
+    n_err = len(report.errors())
+    n_warn = len(report.findings) - n_err
+    if report.findings:
+        by_rule = ", ".join(f"{k}={v}"
+                            for k, v in report.summary().items())
+        print(f"[analysis] {n_err} error(s), {n_warn} warning(s), "
+              f"{len(report.suppressed)} suppressed ({by_rule})")
+    else:
+        print(f"[analysis] clean: 0 findings "
+              f"({len(report.suppressed)} suppressed)")
+    if args.report:
+        with open(args.report, "w") as fh:
+            fh.write(report.to_json(strict=args.strict))
+        print(f"[analysis] report written to {args.report}")
+    return report.exit_code(args.strict)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

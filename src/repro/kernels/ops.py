@@ -19,6 +19,7 @@ this CPU host; on a real TPU backend it compiles to Mosaic.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -41,15 +42,42 @@ def _interp(interpret: Optional[bool]) -> bool:
     return (not on_tpu()) if interpret is None else interpret
 
 
-def _check_tiles(fn_name: str, **tile_vs_dim) -> None:
+class TileAlignmentWarning(UserWarning):
+    """An explicitly-requested tile the hardware would pad: its
+    lane-facing extent is not a multiple of 128 (or sublane-facing not
+    a multiple of 8) and it does not span the full operand dimension.
+    The launch is correct but wastes MXU/VPU lanes — the same
+    diagnostic the static analyzer reports as KL003/KL004."""
+
+
+def _check_tiles(fn_name: str, lane=(), sublane=(),
+                 **tile_vs_dim) -> None:
     """Reject explicitly-requested tiles strictly larger than their
-    operand dimension (0 = auto is always fine)."""
+    operand dimension (0 = auto is always fine), and warn when an
+    explicit tile is misaligned: ``lane``/``sublane`` name the tile
+    parameters that land on the minor / second-minor axis of some
+    block (a tile spanning the whole operand dimension is exempt —
+    there is nothing left to align)."""
     for name, (tile, dim) in tile_vs_dim.items():
         if tile and tile > dim:
             raise ValueError(
                 f"{fn_name}: requested tile {name}={tile} exceeds the "
                 f"operand dimension {dim}; pass {name}=0 (auto) or a "
                 f"tile <= {dim}")
+        if not tile or tile == dim:
+            continue
+        if name in lane and tile % 128:
+            warnings.warn(
+                f"{fn_name}: tile {name}={tile} is lane-misaligned "
+                f"(not a multiple of 128 and not the full dimension "
+                f"{dim}); the hardware pads the minor axis to 128",
+                TileAlignmentWarning, stacklevel=3)
+        if name in sublane and tile % 8:
+            warnings.warn(
+                f"{fn_name}: tile {name}={tile} is sublane-misaligned "
+                f"(not a multiple of 8 and not the full dimension "
+                f"{dim}); the hardware pads the second-minor axis to 8",
+                TileAlignmentWarning, stacklevel=3)
 
 
 def _fit_tiles(m, n, k, bm, bn, bk):
@@ -67,7 +95,8 @@ def matmul(a, b, *, bm: int = 0, bn: int = 0, bk: int = 0,
            interpret: Optional[bool] = None):
     m, k = a.shape
     n = b.shape[1]
-    _check_tiles("matmul", bm=(bm, m), bn=(bn, n), bk=(bk, k))
+    _check_tiles("matmul", lane=("bn", "bk"), sublane=("bm", "bk"),
+                 bm=(bm, m), bn=(bn, n), bk=(bk, k))
     if not (bm and bn and bk):
         t = mxu_model.pick_tile(m, n, k, str(a.dtype))
         bm, bn, bk = t.bm, t.bn, t.bk
@@ -81,7 +110,8 @@ def fp8_matmul(aq, bq, sx, sw, *, bm: int = 0, bn: int = 0, bk: int = 0,
                interpret: Optional[bool] = None):
     m, k = aq.shape
     n = bq.shape[1]
-    _check_tiles("fp8_matmul", bm=(bm, m), bn=(bn, n), bk=(bk, k))
+    _check_tiles("fp8_matmul", lane=("bn", "bk"), sublane=("bm", "bk"),
+                 bm=(bm, m), bn=(bn, n), bk=(bk, k))
     if not (bm and bn and bk):
         t = mxu_model.pick_tile(m, n, k, str(aq.dtype))
         bm, bn, bk = t.bm, t.bn, t.bk
@@ -98,7 +128,8 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = 0,
     (S < 128) get an S-sized tile instead of relying on a silent clamp
     of the old 128 default."""
     Sq, Sk = q.shape[1], k.shape[1]
-    _check_tiles("flash_attention", bq=(bq, Sq), bk=(bk, Sk))
+    _check_tiles("flash_attention", sublane=("bq", "bk"),
+                 bq=(bq, Sq), bk=(bk, Sk))
     bq = bq or min(128, Sq)
     bk = bk or min(128, Sk)
     return _flash.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
@@ -109,7 +140,9 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = 0,
 def tropical_matmul(a, b, *, bm: int = 0, bn: int = 0, bk: int = 0,
                     interpret: Optional[bool] = None):
     m, n, k = a.shape[0], b.shape[1], a.shape[1]
-    _check_tiles("tropical_matmul", bm=(bm, m), bn=(bn, n), bk=(bk, k))
+    _check_tiles("tropical_matmul", lane=("bn", "bk"),
+                 sublane=("bm", "bk"),
+                 bm=(bm, m), bn=(bn, n), bk=(bk, k))
     bm, bn, bk = _fit_tiles(m, n, k, bm or 32, bn or 32, bk or 32)
     return _dpx.tropical_matmul(a, b, bm=bm, bn=bn, bk=bk,
                                 interpret=_interp(interpret))
@@ -128,7 +161,9 @@ def smith_waterman(seq_a, seq_b, *, match: int = 2, mismatch: int = -1,
 def pipelined_matmul(a, b, *, bm: int = 0, bn: int = 0, bk: int = 0,
                      stages: int = 2, interpret: Optional[bool] = None):
     m, n, k = a.shape[0], b.shape[1], a.shape[1]
-    _check_tiles("pipelined_matmul", bm=(bm, m), bn=(bn, n), bk=(bk, k))
+    _check_tiles("pipelined_matmul", lane=("bn", "bk"),
+                 sublane=("bm", "bk"),
+                 bm=(bm, m), bn=(bn, n), bk=(bk, k))
     bm, bn, bk = _fit_tiles(m, n, k, bm or 32, bn or 32, bk or 32)
     return _async.pipelined_matmul(a, b, bm=bm, bn=bn, bk=bk, stages=stages,
                                    interpret=_interp(interpret))

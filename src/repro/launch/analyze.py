@@ -1,0 +1,18 @@
+"""Launcher for the serving-contract analyzer.
+
+    PYTHONPATH=src python -m repro.launch.analyze --strict \
+        --report analysis_report.json
+
+Thin wrapper over ``python -m repro.analysis`` (same flags) so the
+analyzer sits next to the serve/train/dryrun entry points; see
+ROADMAP.md "Serving contracts" for the rule registry.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.analysis.__main__ import main
+
+if __name__ == "__main__":
+    sys.exit(main())

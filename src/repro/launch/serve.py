@@ -190,9 +190,13 @@ def main() -> None:
           f"tokens={int(stats['tokens'])} "
           f"throughput={stats['tokens_per_s']:.1f} tok/s "
           f"(paper Table XII protocol)")
+    counts = srv.compile_counts()
+    per_program = " ".join(f"{name}={max(n, 0)}"
+                           for name, n in sorted(counts.items()))
     print(f"  prefill={stats['prefill_seconds']:.2f}s "
           f"decode={stats['decode_seconds']:.2f}s "
-          f"compiled_programs={sum(max(v, 0) for v in srv.compile_counts().values())}")
+          f"compiled_programs={sum(max(v, 0) for v in counts.values())} "
+          f"({per_program})")
     if "pool_blocks" in stats:
         print(f"  paged-kv: {int(stats['peak_blocks_in_use'])}/"
               f"{int(stats['pool_blocks'])} blocks peak "

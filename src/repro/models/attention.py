@@ -77,7 +77,7 @@ def out_project(p, o: jax.Array, *, groups: int = 0) -> jax.Array:
         wg = wo.reshape(groups, H // groups, hd, wo.shape[-1])
         parts = jnp.einsum("bsghk,ghkd->gbsd", og, wg,
                            preferred_element_type=jnp.float32)
-        y = fixed_tree_sum(parts).astype(o.dtype)
+        y = fixed_tree_sum(parts, tag="xshard_attn_out").astype(o.dtype)
     else:
         y = jnp.einsum("bshk,hkd->bsd", o, wo)
     return constrain(y, ("batch", "seq", "embed"))

@@ -14,6 +14,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import PartitionSpec as P
 
 # ----------------------------------------------------------------------
@@ -93,7 +94,8 @@ def partition_specs(specs, rules: Dict[str, Optional[str]],
     return jax.tree_util.tree_map(resolve, specs, is_leaf=is_spec)
 
 
-def fixed_tree_sum(parts: jax.Array) -> jax.Array:
+def fixed_tree_sum(parts: jax.Array, *,
+                   tag: Optional[str] = None) -> jax.Array:
     """Sum over the leading axis with a FIXED halving tree.
 
     Pads the axis to a power of two with zeros, then repeatedly adds
@@ -106,7 +108,14 @@ def fixed_tree_sum(parts: jax.Array) -> jax.Array:
     it.  This is what makes tp>1 serving token-identical to tp=1
     (sharding/plans.ServingPlan): a plain sharded einsum would psum
     per-device partials in a data-layout-dependent order.
+
+    ``tag`` (convention: ``xshard_<site>``) marks the partials with a
+    ``checkpoint_name`` so the static analyzer (repro.analysis, rule
+    JX004) can find every cross-shard reduction in a serving jaxpr and
+    verify it accumulates in fp32.
     """
+    if tag is not None:
+        parts = checkpoint_name(parts, tag)
     n = parts.shape[0]
     p2 = 1
     while p2 < n:

@@ -49,7 +49,7 @@ def mlp(cfg, p, x: jax.Array, *, groups: int = 0) -> jax.Array:
         wg = p["w_down"].astype(dt).reshape(groups, f // groups, -1)
         parts = jnp.einsum("bsgf,gfd->gbsd", hg, wg,
                            preferred_element_type=jnp.float32)
-        y = fixed_tree_sum(parts).astype(dt)
+        y = fixed_tree_sum(parts, tag="xshard_mlp_down").astype(dt)
     else:
         y = h @ p["w_down"].astype(dt)
     if cfg.use_bias:

@@ -314,6 +314,10 @@ def _serving_scan(cfg, params, cache, x, pos, positions, block_table, *,
           else (params["layers"], quant["layers"], cache))
     x, new_cache = lax.scan(body, x, xs)
     x = apply_norm(cfg, x, params["final_norm"])
+    # trace hook: every serving program's jaxpr must carry this tag —
+    # the static analyzer (repro.analysis, JX006) uses it to prove a
+    # traced work unit actually went through the serving forward
+    x = checkpoint_name(x, "serving_hot_path")
     return x, new_cache
 
 

@@ -96,7 +96,11 @@ class AuditedChunkedServer(ChunkedServer):
                    active, max_new, block_table):
         ct = np.asarray(cur_tok).copy()
         ob = np.asarray(out_buf).copy()
-        pos, out_len, act = pos.copy(), out_len.copy(), active.copy()
+        # operands arrive as device arrays (the server device_puts its
+        # scheduler state explicitly); pull them back to mutable numpy
+        pos, out_len, act = (np.asarray(pos).copy(),
+                             np.asarray(out_len).copy(),
+                             np.asarray(active).copy())
         T, cap = ob.shape[1], self.max_len - 1
         for _ in range(self.span):
             for s in np.flatnonzero(act):
@@ -115,7 +119,9 @@ class AuditedChunkedServer(ChunkedServer):
         K1 = self.spec_decode + 1
         ct = np.asarray(cur_tok).copy()
         ob = np.asarray(out_buf).copy()
-        pos, out_len, act = pos.copy(), out_len.copy(), active.copy()
+        pos, out_len, act = (np.asarray(pos).copy(),
+                             np.asarray(out_len).copy(),
+                             np.asarray(active).copy())
         emit = np.zeros(self.B, np.int32)
         T, cap = ob.shape[1], self.max_len - 1
         for s in np.flatnonzero(act):

@@ -1,0 +1,3 @@
+# Seeded-violation fixtures for the serving-contract analyzer tests
+# (tests/test_analysis.py).  Each module intentionally violates exactly
+# one rule; they are never imported, only parsed by the AST layer.

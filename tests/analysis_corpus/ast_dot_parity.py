@@ -1,0 +1,13 @@
+"""Seeded violation for AST002: an einsum contraction inside a
+parity-critical attention body that must stay explicit multiply+sum.
+Never imported — parsed only.
+"""
+
+import jax.numpy as jnp
+
+
+def decode_attention(q, k, v):
+    s = jnp.einsum("bhd,btd->bht", q, k)    # AST002: dot in score body
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.sum(p[..., None] * v[:, None], axis=2)

@@ -1,0 +1,14 @@
+"""Seeded violation for AST001: a ``.item()`` host readback inside a
+function reachable from a hot-path root.  Never imported — parsed only.
+"""
+
+import jax.numpy as jnp
+
+
+def _readback(y):
+    return float(y.item())      # AST001: host transfer on the hot path
+
+
+def hot_impl(x):
+    y = jnp.sum(x * 2)
+    return _readback(y)

@@ -1,0 +1,23 @@
+"""Seeded violation for AST003: a jitted method reading mutable server
+state through ``self`` — jit freezes the value at trace time (the seed
+SlotServer frozen-``self.pos`` bug).  Never imported — parsed only.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+class BrokenServer:
+    def __init__(self):
+        self.pos = 0
+        self._fn = jax.jit(self._impl)
+
+    def _impl(self, x):
+        # AST003: self.pos is reassigned in step(), so this read is
+        # frozen at the first trace
+        return x + jnp.asarray(self.pos)
+
+    def step(self, x):
+        out = self._fn(x)
+        self.pos = self.pos + 1
+        return out

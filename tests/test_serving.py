@@ -294,3 +294,26 @@ def test_host_mirror_dtypes_are_int32(setup):
     assert srv.out_len.dtype == np.int32
     assert srv.prompt_off.dtype == np.int32
     assert srv.block_table.dtype == np.int32
+
+
+def test_decode_span_serve_is_transfer_free(setup):
+    """The serve loop's decode spans must run under
+    jax.transfer_guard("disallow"): every host->device operand crosses
+    through the server's explicit device_put and readbacks are
+    explicit device_get — the dynamic pin of the transfer-free
+    contract the static analyzer (repro.analysis, AST001) checks at
+    the source level.  The first wave compiles the work units outside
+    the guard (compilation materializes jit constants, a one-time
+    cost); the second wave dispatches fully guarded."""
+    cfg, params = setup
+    srv = ChunkedServer(cfg, params, batch_slots=2, max_len=64,
+                        chunk=8, span=4)
+    warm = sharegpt_like_requests(4, cfg.vocab_size, max_input=16,
+                                  max_output=8, seed=11)
+    srv.serve(warm)
+    wave = sharegpt_like_requests(4, cfg.vocab_size, max_input=16,
+                                  max_output=8, seed=12)
+    with jax.transfer_guard("disallow"):
+        stats = srv.serve(wave)
+    assert all(r.done for r in wave)
+    assert stats["decode_steps"] > 0

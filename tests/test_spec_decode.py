@@ -274,3 +274,29 @@ def test_eos_none_spec_matches_eos_none_span(setup):
     for ra, rb in zip(a, b):
         assert len(ra.output) == ra.max_new
         assert ra.output == rb.output
+
+
+def test_spec_decode_serve_is_transfer_free(setup):
+    """Speculative serving under jax.transfer_guard("disallow"):
+    draft/verify/accept bookkeeping syncs through explicit device_get
+    and every scheduler operand through explicit device_put, so the
+    data-dependent spec path is exactly as transfer-disciplined as the
+    length-only span path (the contract repro.analysis AST001 pins
+    statically).  Wave 1 compiles outside the guard; wave 2 serves
+    fully guarded and must stay bit-identical to the span oracle."""
+    cfg, params = setup
+    reqs = sharegpt_like_requests(4, cfg.vocab_size, max_input=16,
+                                  max_output=8, seed=21)
+    a, b = clone_requests(reqs), clone_requests(reqs)
+    ChunkedServer(cfg, params, batch_slots=2, max_len=64, chunk=8,
+                  span=4).serve(a)
+    srv = ChunkedServer(cfg, params, batch_slots=2, max_len=64,
+                        chunk=8, span=4, spec_decode=3)
+    warm = sharegpt_like_requests(4, cfg.vocab_size, max_input=16,
+                                  max_output=8, seed=22)
+    srv.serve(warm)
+    with jax.transfer_guard("disallow"):
+        stats = srv.serve(b)
+    for ra, rb in zip(a, b):
+        assert ra.output == rb.output
+    assert stats["spec_steps"] > 0
