@@ -51,6 +51,13 @@ reductions make greedy outputs token-identical to tp=1 — asserted by
 CI on the uploaded snapshot's ``tp`` section, together with O(1)
 compile counts and the per-device KV-byte shrink.
 
+A telemetry pass re-serves each protocol's mix through the obs Tracer
+(src/repro/obs, ROADMAP "Serving telemetry") and reports per-request
+TTFT/TPOT/queue-delay/e2e percentiles (nearest-rank p50/p95/p99), and
+an obs-overhead A/B on the full-featured ShareGPT config: traced vs
+untraced greedy outputs must stay bit-identical with unchanged compile
+counts, and the best-of-3 tokens/s delta bounds the tracer's cost.
+
 Also reports the prefill/decode wall-time split, the compiled-program
 counts, greedy-output parity, and the paged pool's utilization
 (peak blocks in use / pool size, KV token capacity vs the contiguous
@@ -65,16 +72,19 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.llama_te import CONFIG as MINI
 from repro.core import roofline
 from repro.core.bench import register
 from repro.core.timer import Timing
 from repro.models import api
+from repro.obs import Tracer, request_latency_summary
 from repro.runtime.server import (ChunkedServer, SlotServer,
                                   clone_requests, repetitive_requests,
                                   sharegpt_like_requests,
                                   sysprompt_sharegpt_requests)
+from repro.te import linear as te_linear
 
 # Snapshot of the last llm_generation run, keyed by param dtype;
 # benchmarks/run.py serializes it to BENCH_serving.json.
@@ -283,9 +293,37 @@ def llm_generation():
         f8_srv.serve(clone_requests(base_reqs))      # compile warmup
         f8_run = clone_requests(base_reqs)
         f8_stats = f8_srv.serve(f8_run)
-        f8_match = (sum(a.output == b.output
-                        for a, b in zip(gk_run, f8_run))
-                    / len(gk_run))
+        # fp8 accuracy: greedy token-match is the wrong yardstick here
+        # (one flipped argmax early in a sequence cascades through the
+        # whole continuation, collapsing the match fraction to 0 even
+        # when every logit is close).  Probe the logits directly: one
+        # chunk_step over the same prompts through a bf16 pool vs an
+        # e4m3 pool + pre-quantized fp8 linears, identity block
+        # tables, and report max/mean absolute logits error.
+        probe_B, probe_T = 4, 16
+        probe_blocks = -(-96 // 16)
+        probe_tokens = jax.random.randint(
+            jax.random.PRNGKey(7), (probe_B, probe_T), 0,
+            cfg.vocab_size, dtype=jnp.int32)
+        probe_bt = jnp.arange(probe_B * probe_blocks,
+                              dtype=jnp.int32).reshape(probe_B,
+                                                       probe_blocks)
+        probe_pos = jnp.zeros((probe_B,), jnp.int32)
+        probe_n = jnp.full((probe_B,), probe_T, jnp.int32)
+        cache_kw = dict(paged=True, block_size=16,
+                        num_blocks=probe_B * probe_blocks)
+        bf_logits, _ = api.chunk_step(
+            cfg, params, api.init_cache(cfg, probe_B, 96, **cache_kw),
+            probe_tokens, probe_pos, probe_n, probe_bt)
+        f8_logits, _ = api.chunk_step(
+            cfg, params,
+            api.init_cache(cfg, probe_B, 96, fp8_kv=True, **cache_kw),
+            probe_tokens, probe_pos, probe_n, probe_bt,
+            quant=te_linear.quantize_serving_params(params))
+        f8_err = np.abs(np.asarray(bf_logits, np.float32)
+                        - np.asarray(f8_logits, np.float32))
+        f8_max_err = float(f8_err.max())
+        f8_mean_err = float(f8_err.mean())
         hd = cfg.head_dim
         # modeled KV read traffic at the mix's mean final context
         mean_ctx = int(sum(min(len(r.prompt) + len(r.output), 96)
@@ -311,6 +349,9 @@ def llm_generation():
             0.0, 0, 1, derived=float(kern_parity),
             derived_name="bool"))
         rows.append(Timing(
+            f"measured(cpu)/fp8-logits-max-abs-err/{dtype_name}",
+            0.0, 0, 1, derived=f8_max_err, derived_name="abs"))
+        rows.append(Timing(
             f"modeled(hbm)/kernel-decode-speedup/{dtype_name}",
             0.0, 0, 1, derived=modeled["kernel_speedup"],
             derived_name="x"))
@@ -330,9 +371,11 @@ def llm_generation():
             "decode_tokens": k_stats["decode_tokens"],
             # bf16 pools: bitwise contract, must be True
             "outputs_identical": bool(kern_parity),
-            # fp8 pools: tolerance tier — fraction of requests whose
-            # greedy outputs happen to survive e4m3 KV + fp8 linears
-            "fp8_output_match_fraction": f8_match,
+            # fp8 pools: tolerance tier — logits error from the paired
+            # single-chunk probe above (token-match fractions are
+            # chaotic under greedy decoding and land on 0)
+            "fp8_logits_max_abs_err": f8_max_err,
+            "fp8_logits_mean_abs_err": f8_mean_err,
             # full per-program registry (chunk_step / decode_span /
             # verify_step / cow_copy where paged) — CI asserts the
             # three serving programs each compiled at most once
@@ -416,6 +459,78 @@ def llm_generation():
                 f"measured(cpu)/tp-output-parity/{dtype_name}",
                 0.0, 0, 1, derived=float(tp_parity),
                 derived_name="bool"))
+        # serving telemetry (ROADMAP "Serving telemetry"): per-request
+        # latency percentiles from the obs tracer on each protocol's
+        # mix — TTFT/TPOT/queue-delay/e2e, nearest-rank p50/p95/p99 —
+        # plus an A/B proving the tracer is effectively free on the
+        # full-featured ShareGPT config: greedy outputs bit-identical,
+        # compile counts unchanged, tokens/s within noise (best-of-3,
+        # alternating traced/untraced on warmed servers).
+        def _pct(d):
+            return {q: d[q] for q in ("p50", "p95", "p99", "mean",
+                                      "count")}
+
+        def _latency(tr):
+            lat = request_latency_summary(tr)
+            return {k: _pct(lat[k])
+                    for k in ("ttft_s", "tpot_s", "queue_delay_s",
+                              "e2e_s")}
+
+        ab_tr = Tracer()
+        ab_srv = ChunkedServer(cfg, params, tracer=ab_tr, **kern_kw)
+        ab_srv.serve(clone_requests(base_reqs))      # compile warmup
+        plain_srv = ChunkedServer(cfg, params, **kern_kw)
+        plain_srv.serve(clone_requests(base_reqs))   # compile warmup
+        best_traced = best_plain = 0.0
+        ab_run = plain_run = []
+        for _ in range(3):
+            ab_tr.clear()
+            ab_run = clone_requests(base_reqs)
+            best_traced = max(best_traced,
+                              ab_srv.serve(ab_run)["tokens_per_s"])
+            plain_run = clone_requests(base_reqs)
+            best_plain = max(
+                best_plain, plain_srv.serve(plain_run)["tokens_per_s"])
+        obs_identical = all(a.output == b.output
+                            for a, b in zip(ab_run, plain_run))
+        obs_compiles_equal = (ab_srv.compile_counts()
+                              == plain_srv.compile_counts())
+        sharegpt_lat = _latency(ab_tr)    # last traced wave's events
+
+        def _mix_latency(reqs, **srv_kw):
+            tr = Tracer()
+            s = ChunkedServer(cfg, params, tracer=tr, **srv_kw)
+            s.serve(clone_requests(reqs))    # compile + cache warmup
+            tr.clear()
+            s.serve(clone_requests(reqs))
+            return _latency(tr)
+
+        latency_sec = {
+            "sharegpt": sharegpt_lat,
+            "sysprompt": _mix_latency(shared_reqs, prefix_cache=True,
+                                      **pc_kw),
+            "repetitive": _mix_latency(rep_reqs, spec_decode=4,
+                                       **spec_kw),
+            "obs_overhead": {
+                "traced_tokens_per_s": best_traced,
+                "untraced_tokens_per_s": best_plain,
+                "overhead_frac": (1.0 - best_traced / best_plain
+                                  if best_plain > 0 else 0.0),
+                "outputs_identical": bool(obs_identical),
+                "compile_counts_equal": bool(obs_compiles_equal),
+                "repeats": 3.0,
+            },
+        }
+        rows.append(Timing(
+            f"measured(cpu)/ttft-p50/{dtype_name}", 0.0, 0, 1,
+            derived=sharegpt_lat["ttft_s"]["p50"], derived_name="s"))
+        rows.append(Timing(
+            f"measured(cpu)/tpot-p50/{dtype_name}", 0.0, 0, 1,
+            derived=sharegpt_lat["tpot_s"]["p50"], derived_name="s"))
+        rows.append(Timing(
+            f"measured(cpu)/obs-overhead/{dtype_name}", 0.0, 0, 1,
+            derived=latency_sec["obs_overhead"]["overhead_frac"],
+            derived_name="frac"))
         SERVING_RESULTS[dtype_name] = {
             "slot_tokens_per_s": slot_stats["tokens_per_s"],
             "chunked_tokens_per_s": stats["tokens_per_s"],
@@ -473,6 +588,7 @@ def llm_generation():
             },
             "kernel": kernel_sec,
             "tp": tp_sec,
+            "latency": latency_sec,
         }
     # paper reference points (H800, llama-2-7B)
     for name, tps in (("paper/H800/llama2-7B/fp32", 568.91),

@@ -46,8 +46,12 @@ PARITY_BODIES = {
     "kernels/paged_attention.py": {"sdpa_rows"},
 }
 
-# packages scanned by ast_lint (plus the PARITY_BODIES files)
-AST_SCAN_PACKAGES = ["src/repro/runtime", "src/repro/models"]
+# packages scanned by ast_lint (plus the PARITY_BODIES files);
+# src/repro/obs is included so instrumentation helpers stay visible to
+# the hot-path reachability scan — the telemetry layer must never put
+# a host transfer on a jitted path (ROADMAP "Serving telemetry")
+AST_SCAN_PACKAGES = ["src/repro/runtime", "src/repro/models",
+                     "src/repro/obs"]
 
 # ----------------------------------------------------------------------
 # layer 2 (Pallas) budgets

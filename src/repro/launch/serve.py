@@ -27,6 +27,8 @@ import jax
 
 from repro.configs import get_config, list_archs, reduced_config
 from repro.models import api
+from repro.obs import (Tracer, phase_summary, summary_table,
+                       write_chrome_trace, write_jsonl)
 from repro.runtime.server import (ChunkedServer, SlotServer,
                                   repetitive_requests,
                                   sharegpt_like_requests,
@@ -109,6 +111,17 @@ def main() -> None:
     ap.add_argument("--max-input", type=int, default=32)
     ap.add_argument("--max-output", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-request lifecycle events + "
+                         "dispatch timings (repro.obs) and print the "
+                         "latency/phase/occupancy summary table; "
+                         "host-side only, outputs stay bit-identical "
+                         "(chunked engine)")
+    ap.add_argument("--trace-out", metavar="PREFIX", default=None,
+                    help="with --trace, also write PREFIX.jsonl "
+                         "(structured events) and PREFIX.trace.json "
+                         "(Chrome trace-event format, Perfetto-"
+                         "loadable)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
@@ -119,6 +132,12 @@ def main() -> None:
             "decode is exercised via api.decode_step (see tests).")
     params = api.init(cfg, jax.random.PRNGKey(args.seed))
     max_len = args.max_input + args.max_output + 8
+    tracer = None
+    if args.trace:
+        if args.engine != "chunked":
+            raise SystemExit("--trace needs the chunked engine (the "
+                             "slot baseline is not instrumented)")
+        tracer = Tracer()
     if args.engine == "chunked":
         srv = ChunkedServer(cfg, params, batch_slots=args.slots,
                             max_len=max_len, chunk=args.chunk,
@@ -130,7 +149,7 @@ def main() -> None:
                             spec_decode=args.spec_decode,
                             kernel=args.kernel, fp8_kv=args.fp8_kv,
                             fp8_linear=args.fp8_linear,
-                            tp=args.tp)
+                            tp=args.tp, tracer=tracer)
     else:
         if args.spec_decode:
             raise SystemExit("--spec-decode needs the chunked engine "
@@ -193,10 +212,24 @@ def main() -> None:
     counts = srv.compile_counts()
     per_program = " ".join(f"{name}={max(n, 0)}"
                            for name, n in sorted(counts.items()))
-    print(f"  prefill={stats['prefill_seconds']:.2f}s "
-          f"decode={stats['decode_seconds']:.2f}s "
-          f"compiled_programs={sum(max(v, 0) for v in counts.values())} "
-          f"({per_program})")
+    if args.engine == "chunked":
+        # per-phase dispatch counts + wall-time breakdown from the
+        # metrics registry the dispatch methods feed (repro.obs) —
+        # live with or without --trace
+        phases = phase_summary(srv.metrics)
+        breakdown = " ".join(
+            f"{name}={d['wall_s']:.2f}s/{d['dispatches']}d"
+            for name, d in phases.items() if d["dispatches"])
+        print(f"  phases: {breakdown} "
+              f"compiled_programs="
+              f"{sum(max(v, 0) for v in counts.values())} "
+              f"({per_program})")
+    else:
+        print(f"  prefill={stats['prefill_seconds']:.2f}s "
+              f"decode={stats['decode_seconds']:.2f}s "
+              f"compiled_programs="
+              f"{sum(max(v, 0) for v in counts.values())} "
+              f"({per_program})")
     if "pool_blocks" in stats:
         print(f"  paged-kv: {int(stats['peak_blocks_in_use'])}/"
               f"{int(stats['pool_blocks'])} blocks peak "
@@ -222,6 +255,13 @@ def main() -> None:
               f"{int(stats['prompt_tokens_total'])} prompt tokens), "
               f"resident={int(stats['cached_blocks'])} blocks, "
               f"evictions={int(stats['cache_evictions'])}")
+    if tracer is not None:
+        print(summary_table(tracer))
+        if args.trace_out:
+            n = write_jsonl(tracer, f"{args.trace_out}.jsonl")
+            m = write_chrome_trace(tracer, f"{args.trace_out}.trace.json")
+            print(f"  wrote {args.trace_out}.jsonl ({n} lines), "
+                  f"{args.trace_out}.trace.json ({m} events)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""Low-overhead serving observability: per-request lifecycle tracing,
+a counters/gauges/histograms registry with a no-op fast path, derived
+latency/occupancy/roofline views, and JSONL + Chrome-trace exports.
+
+Host-side only by construction — timestamps wrap jitted dispatches
+(after ``block_until_ready()``), never enter them; the analyzer's
+JX001/AST001 rules plus tests/test_obs.py's transfer-guard test keep
+it that way.
+"""
+
+from repro.obs.metrics import (Counter, Gauge, Histogram,
+                               MetricsRegistry, NullMetricsRegistry,
+                               NULL_METRICS)
+from repro.obs.tracer import (RequestRecord, Tracer, NullTracer,
+                              NULL_TRACER)
+from repro.obs.views import (occupancy_summary, percentiles,
+                             phase_summary, request_latency_summary,
+                             roofline_efficiency, summary_table)
+from repro.obs.export import write_chrome_trace, write_jsonl
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "NullMetricsRegistry", "NULL_METRICS",
+    "RequestRecord", "Tracer", "NullTracer", "NULL_TRACER",
+    "percentiles", "request_latency_summary", "phase_summary",
+    "occupancy_summary", "roofline_efficiency", "summary_table",
+    "write_jsonl", "write_chrome_trace",
+]

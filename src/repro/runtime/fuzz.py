@@ -196,8 +196,9 @@ class AuditedChunkedServer(ChunkedServer):
         self._audit()
 
     def _truncate_blocks(self, s, upto):
-        super()._truncate_blocks(s, upto)
+        freed = super()._truncate_blocks(s, upto)
         self._audit()
+        return freed
 
     def _harvest(self):
         served = super()._harvest()

@@ -48,6 +48,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import NULL_METRICS
+from repro.obs.tracer import NULL_TRACER
+
 
 def _common_prefix_len(a: np.ndarray, b: np.ndarray) -> int:
     n = min(len(a), len(b))
@@ -140,12 +143,17 @@ class _Node:
 class RadixPrefixCache:
     """Block-aligned radix tree mapping token-ID runs to pool blocks."""
 
-    def __init__(self, pool: BlockPool, block_size: int):
+    def __init__(self, pool: BlockPool, block_size: int, *,
+                 tracer=None, metrics=None):
         self.pool = pool
         self.bs = block_size
         self.root = _Node(None, np.zeros(0, np.int32), [], 0, block_size)
         self._tick = 0
         self.evicted_blocks = 0         # lifetime eviction counter
+        # host-side observability (repro.obs); both default to no-ops
+        # so standalone tree usage (tests, fuzz) records nothing
+        self.obs = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
 
     # -- queries ----------------------------------------------------------
 
@@ -166,6 +174,19 @@ class RadixPrefixCache:
         request mapping it must copy-on-write before writing into the
         block.  Bumps LRU access time along the matched path.
         """
+        full, partial, plen = self._match(tokens)
+        matched = len(full) * self.bs + plen
+        self.metrics.counter("serving.prefix.lookups").inc()
+        if matched:
+            self.metrics.counter("serving.prefix.hits").inc()
+            self.metrics.counter("serving.prefix.hit_tokens").inc(matched)
+        if self.obs.enabled:
+            self.obs.event("prefix_lookup", matched_tokens=matched,
+                           full_blocks=len(full), partial_len=plen)
+        return full, partial, plen
+
+    def _match(self, tokens: np.ndarray
+               ) -> Tuple[List[int], Optional[int], int]:
         self._tick += 1
         bs = self.bs
         tokens = np.ascontiguousarray(tokens, np.int32)
@@ -330,6 +351,10 @@ class RadixPrefixCache:
                     heapq.heappush(
                         heap,
                         (parent.block_access[-1], id(parent), parent))
+        if freed:
+            self.metrics.counter("serving.prefix.evictions").inc(freed)
+            if self.obs.enabled:
+                self.obs.event("eviction", blocks=freed, requested=n)
         return freed
 
     # -- integrity (tests) ------------------------------------------------

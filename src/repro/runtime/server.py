@@ -119,6 +119,8 @@ from jax import lax
 from repro.configs.base import ModelConfig
 from repro.launch.mesh import make_tp_mesh
 from repro.models import api, transformer
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.runtime import spec_decode as spec
 from repro.runtime.prefix_cache import BlockPool, RadixPrefixCache
 from repro.sharding import axes as axes_mod
@@ -261,7 +263,8 @@ class ChunkedServer:
                  spec_n_ctx: int = spec.DEFAULT_N_CTX,
                  kernel: bool = False, fp8_kv: bool = False,
                  fp8_linear: bool = False,
-                 tp: int = 1, mesh=None):
+                 tp: int = 1, mesh=None,
+                 tracer: Optional[Tracer] = None):
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
         self.B = batch_slots
@@ -270,6 +273,16 @@ class ChunkedServer:
         self.span = span
         self.paged = paged
         self.eos_id = eos_id
+        # -- observability (repro.obs): `self.obs` records lifecycle
+        # events only when a Tracer is passed (NULL_TRACER's methods
+        # are no-ops and `enabled=False` skips arg construction at the
+        # call sites); `self.metrics` is ALWAYS a real registry so the
+        # per-phase dispatch/wall-time breakdown exists even untraced.
+        # Both are host-side only: timestamps wrap jitted dispatches
+        # (after block_until_ready), never enter them.
+        self.obs = tracer if tracer is not None else NULL_TRACER
+        self.metrics = (tracer.metrics if tracer is not None
+                        else MetricsRegistry())
         # -- serving hot-path variants (models/transformer fwd kwargs):
         # kernel=True reads paged KV through the fused Pallas
         # block-table kernels (kernels/paged_attention; bitwise-equal
@@ -350,7 +363,9 @@ class ChunkedServer:
                                        -1, np.int32)
             self.pool = BlockPool(self.num_blocks)
             if prefix_cache:
-                self.prefix_cache = RadixPrefixCache(self.pool, block_size)
+                self.prefix_cache = RadixPrefixCache(self.pool, block_size,
+                                                     tracer=self.obs,
+                                                     metrics=self.metrics)
             self._slot_blocks: List[List[int]] = [[] for _ in range(batch_slots)]
             self._num_shared = np.zeros(batch_slots, np.int32)
             self._cow_pending = [False] * batch_slots
@@ -414,6 +429,24 @@ class ChunkedServer:
             self.spec_drafted = 0
             self.spec_accepted = 0
             self.spec_emitted = 0
+        if self.obs.enabled:
+            # server geometry next to the events: the roofline view
+            # (obs/views.roofline_efficiency) prices each recorded
+            # decode dispatch through core/roofline with these
+            self.obs.meta.update(
+                batch_slots=self.B, chunk=self.chunk, span=self.span,
+                max_len=self.max_len, num_layers=cfg.num_layers,
+                kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                spec_decode=self.spec_decode, tp=self.tp,
+                paged=self.paged)
+            if self.paged:
+                self.obs.meta.update(
+                    block_size=self.block_size,
+                    max_blocks=self.max_blocks,
+                    num_blocks=self.num_blocks,
+                    kv_read_mode=("fp8_kernel"
+                                  if self.kernel and self.fp8_kv else
+                                  "kernel" if self.kernel else "gather"))
 
     def _sharding_kw(self, *, n_ops: int, n_out: Optional[int] = None,
                      with_params: bool = True) -> Dict[str, Any]:
@@ -645,6 +678,10 @@ class ChunkedServer:
             self._reserved[s] -= 1
             self._reserved_total -= 1
             self._cow_pending[s] = False
+            self.metrics.counter("serving.cow.resolves").inc()
+            if self.obs.enabled:
+                self.obs.event("cow_resolve", slot=int(s), src=int(src),
+                               dst=int(dst))
         assert need - len(owned) <= self._reserved[s], \
             f"slot {s}: demand {need} blocks exceeds reservation"
         while len(owned) < need:
@@ -653,9 +690,11 @@ class ChunkedServer:
             owned.append(b)
             self._reserved[s] -= 1
             self._reserved_total -= 1
-        self.peak_blocks = max(self.peak_blocks, self._blocks_in_use())
+        in_use = self._blocks_in_use()
+        self.peak_blocks = max(self.peak_blocks, in_use)
+        self.metrics.gauge("serving.pool.blocks_in_use").set(float(in_use))
 
-    def _truncate_blocks(self, s: int, upto: int) -> None:
+    def _truncate_blocks(self, s: int, upto: int) -> int:
         """Roll slot s's block-table frontier back so it owns exactly
         the blocks covering virtual [0, upto) — the paged-cache
         rollback after a verify step rejects draft tokens.  Blocks
@@ -666,16 +705,20 @@ class ChunkedServer:
         sit below the decode frontier, so refcount/COW invariants are
         untouched.  Stale KV the rejected rows scattered beyond `upto`
         lands where the position masks never read and the next write
-        window lands first (see attention.update_paged_cache)."""
+        window lands first (see attention.update_paged_cache).
+        Returns the number of blocks rolled back."""
         owned = self._slot_blocks[s]
         keep = -(-upto // self.block_size)
         assert keep >= int(self._num_shared[s]) + bool(self._cow_pending[s])
+        freed = 0
         while len(owned) > keep:
             b = owned.pop()
             self.block_table[s, len(owned)] = -1
             self.pool.decref(b)
             self._reserved[s] += 1
             self._reserved_total += 1
+            freed += 1
+        return freed
 
     def _free_slot_blocks(self, s: int) -> None:
         """free == decref: cached blocks stay resident (evictable),
@@ -751,6 +794,11 @@ class ChunkedServer:
                                 f"grow num_blocks")
                         # backpressure: wait for a harvest to free blocks
                         self.admission_stalls += 1
+                        self.metrics.counter(
+                            "serving.admission.stalls").inc()
+                        if self.obs.enabled:
+                            self.obs.event("stall", rid=req.rid,
+                                           needed_blocks=needed)
                         break
                     self._reserved[s] = needed
                     self._reserved_total += needed
@@ -775,6 +823,12 @@ class ChunkedServer:
                 self.prompt_off[s] = matched
                 self.pos[s] = matched
                 self.out_len[s] = 0
+                self.metrics.counter("serving.requests.admitted").inc()
+                if self.obs.enabled:
+                    self.obs.admit(req.rid, s, matched, req.truncated)
+                    if matched:
+                        self.obs.event("prefix_match", rid=req.rid,
+                                       slot=s, matched_tokens=matched)
 
     def _check_done(self, s: int) -> None:
         # stop rule, applied after every emit (including the first token
@@ -783,10 +837,22 @@ class ChunkedServer:
         req = self.slot_req[s]
         if (self.out_len[s] >= req.max_new
                 or self.pos[s] >= self.max_len - 1):
-            self.mode[s] = "done"
+            self._mark_done(s)
+
+    def _mark_done(self, s: int) -> None:
+        """Every prefill/decode -> done transition funnels through here
+        so the tracer's per-request completion timestamp (t_done, the
+        TPOT endpoint) lands exactly when the emitting dispatch's host
+        bookkeeping observed the stop."""
+        self.mode[s] = "done"
+        if self.obs.enabled:
+            req = self.slot_req[s]
+            if req is not None:
+                self.obs.finish(req.rid, int(self.out_len[s]))
 
     def _run_chunk_step(self) -> int:
         """One packed step: prefill chunks + piggybacked decodes."""
+        t0 = time.perf_counter()
         B, C = self.B, self.chunk
         tokens_host = np.zeros((B, C), np.int32)
         n_tokens = np.zeros(B, np.int32)
@@ -816,6 +882,21 @@ class ChunkedServer:
             self._put(self.out_len.copy()),
             self._put(self._device_block_table()))
         self.cur_tok.block_until_ready()
+        # dispatch wall time: host prep + device step, measured AFTER
+        # block_until_ready so async dispatch can't hide the step (the
+        # timestamp never enters the jitted body — JX001/AST001)
+        t1 = time.perf_counter()
+        packed = int(n_tokens.sum())
+        self.metrics.counter("serving.dispatches.prefill").inc()
+        self.metrics.histogram("serving.wall_s.prefill").record(t1 - t0)
+        self.metrics.histogram("serving.chunk.occupancy").record(
+            packed / (B * C) if B * C else 0.0)
+        if self.obs.enabled:
+            self.obs.span("chunk_dispatch", t0, t1,
+                          packed_tokens=packed,
+                          n_prefill=int((n_tokens > 0).sum()
+                                        - is_decode.sum()),
+                          n_decode=int(is_decode.sum()))
         # EOS needs the emitted tokens on the host; length-only stopping
         # stays transfer-free (the readback is explicit so the loop
         # stays valid under jax.transfer_guard("disallow"))
@@ -833,21 +914,29 @@ class ChunkedServer:
                 if emit[s]:                 # prompt exhausted: first token
                     self.mode[s] = "decode"
                     self.out_len[s] += 1
+                    if self.obs.enabled:
+                        self.obs.first_token(req.rid)
                     if toks is not None and int(toks[s]) == self.eos_id:
-                        self.mode[s] = "done"
+                        self._mark_done(s)
                     else:
                         self._check_done(s)
             elif self.mode[s] == "decode":
                 self.out_len[s] += 1
                 self.pos[s] += 1
                 if toks is not None and int(toks[s]) == self.eos_id:
-                    self.mode[s] = "done"
+                    self._mark_done(s)
                 else:
                     self._check_done(s)
         return prompt_tokens
 
     def _run_decode_span(self) -> None:
+        t0 = time.perf_counter()
         active = np.array([m == "decode" for m in self.mode])
+        if self.obs.enabled:
+            # pre-span context lengths of the active slots (host mirror
+            # scalars) — the roofline view prices the span's KV traffic
+            # from these
+            kv_lens = tuple(int(p) for p in self.pos[active])
         max_new = np.array(
             [r.max_new if r is not None else 0 for r in self.slot_req],
             np.int32)
@@ -875,6 +964,8 @@ class ChunkedServer:
             self._put(active), self._put(max_new),
             self._put(self._device_block_table()))
         self.cur_tok.block_until_ready()
+        t1 = time.perf_counter()
+        prev_out = self.out_len
         if self.eos_id is None:
             self.pos = sim_pos
             self.out_len = sim_out
@@ -885,8 +976,17 @@ class ChunkedServer:
             self.pos = np.array(jax.device_get(pos_d), np.int32)
             self.out_len = np.array(jax.device_get(out_d), np.int32)
             done_now = active & ~jax.device_get(act_d)
+        productive = int((self.out_len - prev_out).sum())
+        self.metrics.counter("serving.dispatches.span").inc()
+        self.metrics.histogram("serving.wall_s.span").record(t1 - t0)
+        self.metrics.histogram("serving.span.utilization").record(
+            productive / (self.B * self.span))
+        if self.obs.enabled:
+            self.obs.span("span_dispatch", t0, t1, steps=self.span,
+                          n_active=int(active.sum()),
+                          emitted=productive, kv_lens=kv_lens)
         for s in np.flatnonzero(done_now):
-            self.mode[s] = "done"
+            self._mark_done(s)
 
     def _run_spec_step(self) -> None:
         """One speculative draft→verify→accept step for every decoding
@@ -898,8 +998,11 @@ class ChunkedServer:
         path) the final pos/out_len/active state always syncs back;
         the paged block tables are then rolled back to each slot's
         accepted frontier."""
+        t0 = time.perf_counter()
         K = self.spec_decode
         active = np.array([m == "decode" for m in self.mode])
+        if self.obs.enabled:
+            kv_lens = tuple(int(p) for p in self.pos[active])
         max_new = np.array(
             [r.max_new if r is not None else 0 for r in self.slot_req],
             np.int32)
@@ -925,20 +1028,32 @@ class ChunkedServer:
         self.pos = np.array(jax.device_get(pos_d), np.int32)
         self.out_len = np.array(jax.device_get(out_d), np.int32)
         done_now = active & ~jax.device_get(act_d)
+        t1 = time.perf_counter()
         if self.paged:
             # rejected drafts: shrink the block-table frontier back to
             # the accepted positions (restores the reservation drawn
             # pre-verify; stale KV beyond it is never read)
             for s in np.flatnonzero(active):
-                self._truncate_blocks(s, int(self.pos[s]))
+                rolled = self._truncate_blocks(s, int(self.pos[s]))
+                if rolled:
+                    self.metrics.counter(
+                        "serving.spec.rollback_blocks").inc(rolled)
+                    if self.obs.enabled:
+                        self.obs.event("spec_rollback", slot=int(s),
+                                       blocks=rolled)
         for s in np.flatnonzero(done_now):
-            self.mode[s] = "done"
+            self._mark_done(s)
         nact = int(active.sum())
         self.spec_steps += 1
         self.spec_slot_steps += nact
         self.spec_drafted += K * nact
         self.spec_emitted += int(emit.sum())
         self.spec_accepted += int(np.maximum(emit - 1, 0).sum())
+        spec.record_dispatch(
+            self.metrics, self.obs, t0=t0, t1=t1, k=K, n_active=nact,
+            emitted=int(emit.sum()),
+            accepted=int(np.maximum(emit - 1, 0).sum()),
+            kv_lens=kv_lens if self.obs.enabled else ())
 
     def _harvest(self) -> int:
         done_slots = [s for s in range(self.B) if self.mode[s] == "done"]
@@ -956,6 +1071,11 @@ class ChunkedServer:
             req.output = [int(t) for t in rows[i, : int(self.out_len[s])]]
             req.done = True
             served += len(req.prompt) + len(req.output)
+            self.metrics.counter("serving.requests.harvested").inc()
+            if self.obs.enabled:
+                self.obs.finish(req.rid, len(req.output))
+                self.obs.event("harvest", rid=req.rid, slot=s,
+                               n_out=len(req.output))
             self.slot_req[s] = None
             self.mode[s] = "idle"
             if self.paged:
@@ -982,10 +1102,17 @@ class ChunkedServer:
     # -- main loop ---------------------------------------------------------
     def serve(self, requests: List[Request]) -> Dict[str, float]:
         queue = list(requests)
+        # per-run metrics, mirroring the per-run counters below (the
+        # tracer's event log, by contrast, accumulates across serve()
+        # calls until the caller clears it — warm/measured A/B runs
+        # call tracer.clear() between waves)
+        self.metrics.reset()
+        if self.obs.enabled:
+            for r in queue:
+                self.obs.enqueue(r.rid, len(r.prompt), r.max_new)
         t0 = time.perf_counter()
         served_tokens = 0
-        prefill_s = decode_s = 0.0
-        prefill_tokens = decode_steps = chunk_steps = spans = 0
+        prefill_tokens = 0
         if self.paged:
             # pool metrics are per serve() run, not per server lifetime
             self.peak_blocks = self._blocks_in_use()
@@ -1006,34 +1133,38 @@ class ChunkedServer:
         while queue or any(r is not None for r in self.slot_req):
             self._admit(queue)
             if any(m == "prefill" for m in self.mode):
-                tc = time.perf_counter()
                 prefill_tokens += self._run_chunk_step()
-                prefill_s += time.perf_counter() - tc
-                chunk_steps += 1
             elif any(m == "decode" for m in self.mode):
-                tc = time.perf_counter()
                 if self.spec_decode:
                     self._run_spec_step()
                 else:
                     self._run_decode_span()
-                    decode_steps += self.span
-                decode_s += time.perf_counter() - tc
-                spans += 1
             served_tokens += self._harvest()
         dt = time.perf_counter() - t0
         compiles = self.compile_counts()
+        # phase counts/wall times come from the metrics registry the
+        # dispatch methods feed (obs/metrics) — the registry is always
+        # live, so these stats keys survive with or without a tracer
+        m = self.metrics
+        chunk_steps = m.counter_value("serving.dispatches.prefill")
+        span_disp = m.counter_value("serving.dispatches.span")
+        verify_disp = m.counter_value("serving.dispatches.verify")
+        prefill_s = m.hist_total("serving.wall_s.prefill")
+        span_s = m.hist_total("serving.wall_s.span")
+        verify_s = m.hist_total("serving.wall_s.verify")
         stats = {
             "requests": float(len(requests)),
             "tokens": float(served_tokens),
             "seconds": dt,
             "tokens_per_s": served_tokens / dt if dt > 0 else 0.0,
             "prefill_seconds": prefill_s,
-            "decode_seconds": decode_s,
+            "decode_seconds": span_s + verify_s,
+            "verify_seconds": verify_s,
             "prefill_tokens": float(prefill_tokens),
             "decode_tokens": float(sum(len(r.output) for r in requests)),
-            "decode_steps": float(decode_steps),
+            "decode_steps": float(span_disp * self.span),
             "chunk_steps": float(chunk_steps),
-            "decode_spans": float(spans),
+            "decode_spans": float(span_disp + verify_disp),
             "compiled_programs": float(sum(max(v, 0)
                                            for v in compiles.values())),
             "tp": float(self.tp),

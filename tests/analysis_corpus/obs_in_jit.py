@@ -1,0 +1,62 @@
+"""Seeded violations for instrumentation placed INSIDE a jitted body —
+the failure mode the serving-telemetry convention (ROADMAP "Serving
+telemetry") forbids: timestamps/metrics belong AROUND jitted
+dispatches, after ``block_until_ready()``, never in them.
+
+Two fixtures, one per analyzer layer:
+
+``instrumented_step``
+    A serving-shaped step whose author "helpfully" timestamps it from
+    inside via ``jax.pure_callback`` — the callback primitive lands in
+    the traced jaxpr and JX001 flags it (tests import this module and
+    run ``jax.make_jaxpr`` over it).
+
+``hot_impl`` -> ``_record``
+    A hot-path root whose inline metrics helper pulls the device value
+    to the host with ``np.asarray`` — AST001 flags the reachable
+    transfer (this file is also parsed-only, like the other AST
+    corpus fixtures).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+
+
+class _Tracer:
+    """Toy metrics sink; the violation is WHERE it's called from."""
+
+    def __init__(self):
+        self.samples = []
+
+    def stamp(self, a):
+        self.samples.append((time.perf_counter(), float(np.mean(a))))
+        return a
+
+
+TRACER = _Tracer()
+
+
+def instrumented_step(x):
+    """JX001: a host callback smuggles a timestamp into the jitted
+    serving step."""
+    parts = checkpoint_name(
+        jnp.stack([x, x]).astype(jnp.float32), "xshard_obs")
+    y = parts[0] + parts[1]
+    y = jax.pure_callback(
+        TRACER.stamp, jax.ShapeDtypeStruct(y.shape, y.dtype), y)
+    return checkpoint_name(y, "serving_hot_path")
+
+
+def _record(x):
+    # AST001: the "metric" forces a device->host transfer mid-step
+    TRACER.samples.append(np.asarray(x).sum())
+
+
+def hot_impl(x):
+    y = jnp.sum(x * 3)
+    _record(y)
+    return y

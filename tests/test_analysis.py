@@ -231,6 +231,36 @@ def test_ast003_mutable_state_capture_fires():
 
 
 # ----------------------------------------------------------------------
+# telemetry-in-jit corpus: instrumentation INSIDE a jitted body is the
+# failure mode the repro.obs host-side-only convention forbids; both
+# existing layers catch it without any new rule
+# ----------------------------------------------------------------------
+
+def test_obs_callback_in_jitted_body_fires_jx001():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "obs_in_jit_corpus", _corpus("obs_in_jit.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    closed = jax.make_jaxpr(mod.instrumented_step)(jnp.zeros((4, 4)))
+    rep = Report()
+    jaxpr_check._check_jaxpr("corpus", "chunk_step", closed.jaxpr, {},
+                             rep)
+    assert rep.count("JX001") == 1
+    assert len(rep.findings) == 1
+
+
+def test_obs_transfer_in_hot_path_fires_ast001():
+    rep = Report()
+    ast_lint.run(rep, paths=[_corpus("obs_in_jit.py")],
+                 repo_root=REPO_ROOT,
+                 roots=[("obs_in_jit", "hot_impl")],
+                 parity_bodies={})
+    assert rep.count("AST001") == 1
+    assert len(rep.findings) == 1
+
+
+# ----------------------------------------------------------------------
 # clean runs: zero false positives on the repo
 # ----------------------------------------------------------------------
 
