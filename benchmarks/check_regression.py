@@ -1,0 +1,207 @@
+"""Bench-regression gate over ``BENCH_serving.json`` snapshots.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline BENCH_serving.json --candidate /tmp/BENCH_new.json \
+        [--tolerance 0.10]
+
+Compares a freshly generated serving snapshot (candidate) against the
+committed one (baseline) and exits non-zero on a regression, printing
+the full metric-by-metric trajectory diff either way.  Rules, applied
+by walking the two JSON trees in parallel:
+
+  * **invariants** — booleans must not flip off (``outputs_identical``
+    True -> False is a correctness regression, never a perf tradeoff)
+    and compile counts must not grow (the O(1)-programs contract);
+    these fail at any tolerance;
+  * **higher-is-better** metrics (``*tokens_per_s``, ``*_tok_s``,
+    speedups, rates, attainment) fail when the candidate drops more
+    than ``tolerance`` (default 10%) below the baseline;
+  * **lower-is-better** metrics (latency percentiles ``p50/p95/p99/
+    mean`` of ``*_s`` summaries, ``*seconds`` totals, overhead
+    fractions, fp8 error bounds) fail when the candidate rises more
+    than ``tolerance`` above the baseline;
+  * a metric present in the baseline but *missing* from the candidate
+    fails (dropped coverage is a regression too); candidate-only keys
+    are additions and pass — so a baseline from before a new BENCH
+    section still gates everything it knows about;
+  * NaN on either side is skipped (the obs layer NaN-marks undefined
+    stats — e.g. percentiles of an empty window — rather than faking
+    zeros; comparing them would be noise), as are unrecognized
+    numerics, which are printed as informational rows.
+
+The gate is deliberately snapshot-vs-snapshot: it has no opinion about
+absolute numbers, only about the trajectory between two runs of
+``python -m benchmarks.run llm_generation`` on comparable hosts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Any, List, Tuple
+
+HIGHER_BETTER_SUFFIXES = (
+    "tokens_per_s", "_tok_s", "speedup", "speedup_warm",
+    "speedup_vs_tp1", "attainment", "max_sustainable_rps", "hit_rate",
+    "acceptance_rate", "tokens_per_step", "goodput_tok_s",
+    "throughput_tok_s", "utilization", "occupancy",
+)
+LOWER_BETTER_SUFFIXES = ("seconds", "overhead_frac", "_abs_err")
+PCTL_KEYS = ("p50", "p95", "p99", "mean")
+
+
+def _is_compile_count(path: Tuple[str, ...]) -> bool:
+    return any("compile" in p for p in path) or (
+        path and path[-1] == "compiled_programs")
+
+
+def _direction(path: Tuple[str, ...]) -> str:
+    """'up' (higher better), 'down' (lower better), or 'info'."""
+    key = path[-1]
+    if key in PCTL_KEYS:
+        parent = path[-2] if len(path) > 1 else ""
+        # latency summaries are keyed '<metric>_s'; windowed
+        # throughput percentiles are keyed 'tokens_per_s'
+        if parent.endswith("tokens_per_s"):
+            return "up"
+        if parent.endswith("_s"):
+            return "down"
+        return "info"
+    for suf in HIGHER_BETTER_SUFFIXES:
+        if key.endswith(suf):
+            return "up"
+    for suf in LOWER_BETTER_SUFFIXES:
+        if key.endswith(suf):
+            return "down"
+    return "info"
+
+
+def _walk(base: Any, cand: Any, path: Tuple[str, ...],
+          rows: List[dict]) -> None:
+    if isinstance(base, dict):
+        if not isinstance(cand, dict):
+            rows.append({"path": path, "status": "MISSING",
+                         "base": "<section>", "cand": cand})
+            return
+        for k in sorted(base):
+            if k not in cand:
+                rows.append({"path": path + (k,), "status": "MISSING",
+                             "base": base[k], "cand": None})
+            else:
+                _walk(base[k], cand[k], path + (k,), rows)
+        return
+    if isinstance(base, bool) or isinstance(cand, bool):
+        ok = (not base) or bool(cand)   # True may not flip off
+        rows.append({"path": path, "base": base, "cand": cand,
+                     "status": "OK" if ok else "REGRESSION",
+                     "rule": "invariant"})
+        return
+    if not isinstance(base, (int, float)) or not isinstance(
+            cand, (int, float)):
+        rows.append({"path": path, "base": base, "cand": cand,
+                     "status": "OK" if base == cand else "INFO",
+                     "rule": "non-numeric"})
+        return
+    if math.isnan(base) or math.isnan(cand):
+        rows.append({"path": path, "base": base, "cand": cand,
+                     "status": "SKIP", "rule": "nan"})
+        return
+    if _is_compile_count(path):
+        rows.append({"path": path, "base": base, "cand": cand,
+                     "status": "OK" if cand <= base else "REGRESSION",
+                     "rule": "compile-count"})
+        return
+    rows.append({"path": path, "base": base, "cand": cand,
+                 "rule": _direction(path)})
+
+
+def _apply_tolerance(rows: List[dict], tol: float) -> None:
+    for r in rows:
+        if "status" in r:
+            continue
+        base, cand, rule = r["base"], r["cand"], r["rule"]
+        if rule == "info":
+            r["status"] = "INFO"
+        elif base == 0:
+            # zero baseline: no ratio to take; a relative gate has
+            # nothing principled to say, so record and move on
+            r["status"] = "SKIP"
+        elif rule == "up":
+            # slack scales with |base| so near-zero and negative
+            # baselines (e.g. a measured overhead_frac of -1%) still
+            # compare sanely
+            r["status"] = ("OK" if cand >= base - tol * abs(base)
+                           else "REGRESSION")
+        else:
+            r["status"] = ("OK" if cand <= base + tol * abs(base)
+                           else "REGRESSION")
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def compare(baseline: dict, candidate: dict,
+            tolerance: float = 0.10) -> Tuple[List[dict], List[dict]]:
+    """Walk both snapshots; returns (all rows, failing rows)."""
+    rows: List[dict] = []
+    _walk(baseline, candidate, (), rows)
+    _apply_tolerance(rows, tolerance)
+    failures = [r for r in rows
+                if r["status"] in ("REGRESSION", "MISSING")]
+    return rows, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="gate a serving-bench snapshot against the "
+                    "committed baseline")
+    ap.add_argument("--baseline", default="BENCH_serving.json")
+    ap.add_argument("--candidate", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="relative slack on perf metrics "
+                         "(default 0.10 = 10%%)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="print failures only")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    rows, failures = compare(baseline, candidate, args.tolerance)
+
+    def _delta(r):
+        if (isinstance(r.get("base"), (int, float))
+                and isinstance(r.get("cand"), (int, float))
+                and not isinstance(r["base"], bool) and r["base"]):
+            return f"{(r['cand'] / r['base'] - 1.0) * 100:+.1f}%"
+        return ""
+
+    print(f"# regression gate: {args.candidate} vs {args.baseline} "
+          f"(tolerance {args.tolerance:.0%})")
+    print(f"{'status':<11} {'metric':<58} {'baseline':>12} "
+          f"{'candidate':>12} {'delta':>8}")
+    for r in rows:
+        if args.quiet and r["status"] not in ("REGRESSION", "MISSING"):
+            continue
+        name = ".".join(r["path"])
+        print(f"{r['status']:<11} {name:<58} {_fmt(r['base']):>12} "
+              f"{_fmt(r.get('cand')):>12} {_delta(r):>8}")
+    n_ok = sum(r["status"] == "OK" for r in rows)
+    print(f"# {n_ok} ok, {len(failures)} failing, "
+          f"{sum(r['status'] == 'SKIP' for r in rows)} skipped, "
+          f"{sum(r['status'] == 'INFO' for r in rows)} informational")
+    if failures:
+        print(f"REGRESSION: {len(failures)} metric(s) failed the gate",
+              file=sys.stderr)
+        return 1
+    print("# gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -17,6 +17,19 @@ the per-device sharding stats:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.launch.serve --tp 4
+
+``--arrival-rate R`` switches from the closed batch to open-loop
+serving: requests arrive on a Poisson stream at R req/s
+(runtime/arrivals) and queue delay is charged from arrival.
+``--duration S`` sizes the stream to ~R*S requests; ``--slo-ttft-ms``
+/ ``--slo-tpot-ms`` (always together) score the run against latency
+deadlines and print the attainment / goodput / windowed-throughput
+summary (obs/slo, obs/windows).  All of it composes with
+``--trace/--trace-out``:
+
+    PYTHONPATH=src python -m repro.launch.serve --arrival-rate 4 \
+        --duration 5 --slo-ttft-ms 500 --slo-tpot-ms 80 \
+        --trace --trace-out /tmp/online
 """
 
 from __future__ import annotations
@@ -27,8 +40,10 @@ import jax
 
 from repro.configs import get_config, list_archs, reduced_config
 from repro.models import api
-from repro.obs import (Tracer, phase_summary, summary_table,
+from repro.obs import (SLOSpec, Tracer, phase_summary, slo_report,
+                       summary_table, window_series, window_summary,
                        write_chrome_trace, write_jsonl)
+from repro.runtime.arrivals import poisson_stream
 from repro.runtime.server import (ChunkedServer, SlotServer,
                                   repetitive_requests,
                                   sharegpt_like_requests,
@@ -111,6 +126,24 @@ def main() -> None:
     ap.add_argument("--max-input", type=int, default=32)
     ap.add_argument("--max-output", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    metavar="RPS",
+                    help="serve open-loop: Poisson request arrivals at "
+                         "RPS req/s against the monotonic clock "
+                         "(chunked engine; queue delay and TTFT are "
+                         "charged from arrival).  Default: closed "
+                         "batch, all requests at t=0")
+    ap.add_argument("--duration", type=float, default=None, metavar="S",
+                    help="with --arrival-rate, size the stream to "
+                         "~rate*S requests (~S seconds of offered "
+                         "traffic) instead of --requests")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT deadline in ms; with --slo-tpot-ms, "
+                         "score the run's SLO attainment and goodput "
+                         "(obs/slo; implies --trace)")
+    ap.add_argument("--slo-tpot-ms", type=float, default=None,
+                    help="TPOT deadline in ms (mean inter-token time "
+                         "after the first); see --slo-ttft-ms")
     ap.add_argument("--trace", action="store_true",
                     help="record per-request lifecycle events + "
                          "dispatch timings (repro.obs) and print the "
@@ -123,6 +156,20 @@ def main() -> None:
                          "(Chrome trace-event format, Perfetto-"
                          "loadable)")
     args = ap.parse_args()
+
+    if (args.slo_ttft_ms is None) != (args.slo_tpot_ms is None):
+        raise SystemExit("--slo-ttft-ms and --slo-tpot-ms go together "
+                         "(the SLO predicate needs both deadlines)")
+    if args.duration is not None and args.arrival_rate is None:
+        raise SystemExit("--duration needs --arrival-rate (it sizes "
+                         "the open-loop stream)")
+    if args.arrival_rate is not None and args.engine != "chunked":
+        raise SystemExit("--arrival-rate needs the chunked engine "
+                         "(the slot baseline has no open-loop path)")
+    if args.slo_ttft_ms is not None:
+        args.trace = True   # attainment is scored off the tracer
+    if args.duration is not None:
+        args.requests = max(1, round(args.arrival_rate * args.duration))
 
     cfg = reduced_config(args.arch)
     if cfg.family not in ("dense", "moe", "vlm"):
@@ -202,13 +249,24 @@ def main() -> None:
                                       max_input=args.max_input,
                                       max_output=args.max_output,
                                       seed=args.seed)
-    stats = srv.serve(reqs)
+    if args.arrival_rate is not None:
+        stream = poisson_stream(reqs, args.arrival_rate,
+                                seed=args.seed)
+        stats = srv.serve_online(stream)
+    else:
+        stats = srv.serve(reqs)
     print(f"arch={args.arch} engine={args.engine} "
           f"workload={args.workload} "
           f"requests={int(stats['requests'])} "
           f"tokens={int(stats['tokens'])} "
           f"throughput={stats['tokens_per_s']:.1f} tok/s "
           f"(paper Table XII protocol)")
+    if args.arrival_rate is not None:
+        print(f"  open-loop: target={args.arrival_rate:.2f} req/s "
+              f"offered={stats['offered_rate_rps']:.2f} req/s over "
+              f"{stats['arrival_span_s']:.2f}s of arrivals, "
+              f"peak-queue-depth={int(stats['peak_queue_depth'])}, "
+              f"idle={stats['idle_s']:.2f}s of {stats['seconds']:.2f}s")
     counts = srv.compile_counts()
     per_program = " ".join(f"{name}={max(n, 0)}"
                            for name, n in sorted(counts.items()))
@@ -257,9 +315,33 @@ def main() -> None:
               f"evictions={int(stats['cache_evictions'])}")
     if tracer is not None:
         print(summary_table(tracer))
+        window_s = max(stats["seconds"] / 8.0, 0.02)
+        if args.slo_ttft_ms is not None:
+            slo = SLOSpec(ttft_s=args.slo_ttft_ms / 1e3,
+                          tpot_s=args.slo_tpot_ms / 1e3)
+            rep = slo_report(tracer, slo, stats["seconds"])
+            wsum = window_summary(window_series(tracer, window_s))
+            tps = wsum["tokens_per_s"]
+            print(f"  slo: ttft<={args.slo_ttft_ms:.0f}ms "
+                  f"tpot<={args.slo_tpot_ms:.0f}ms -> "
+                  f"attainment={rep['attainment']:.2%} "
+                  f"({rep['met']}/{rep['finished']} met, "
+                  f"{rep['ttft_misses']} ttft / "
+                  f"{rep['tpot_misses']} tpot misses)")
+            print(f"  goodput: {rep['goodput_tok_s']:.1f} of "
+                  f"{rep['throughput_tok_s']:.1f} tok/s from SLO-met "
+                  f"requests ({int(rep['good_tokens'])}/"
+                  f"{int(rep['finished_tokens'])} output tokens)")
+            print(f"  windowed({window_s * 1e3:.0f}ms x "
+                  f"{wsum['n_windows']}): tok/s p50={tps['p50']:.1f} "
+                  f"p95={tps['p95']:.1f} p99={tps['p99']:.1f}, "
+                  f"peak-queue-depth={wsum['peak_queue_depth']}, "
+                  f"stalls={wsum['stalls']}")
         if args.trace_out:
             n = write_jsonl(tracer, f"{args.trace_out}.jsonl")
-            m = write_chrome_trace(tracer, f"{args.trace_out}.trace.json")
+            m = write_chrome_trace(tracer,
+                                   f"{args.trace_out}.trace.json",
+                                   window_s=window_s)
             print(f"  wrote {args.trace_out}.jsonl ({n} lines), "
                   f"{args.trace_out}.trace.json ({m} events)")
 

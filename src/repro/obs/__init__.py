@@ -1,6 +1,8 @@
 """Low-overhead serving observability: per-request lifecycle tracing,
 a counters/gauges/histograms registry with a no-op fast path, derived
-latency/occupancy/roofline views, and JSONL + Chrome-trace exports.
+latency/occupancy/roofline views, time-windowed series, SLO/goodput
+accounting, and JSONL + Chrome-trace exports (with windowed counter
+tracks).
 
 Host-side only by construction — timestamps wrap jitted dispatches
 (after ``block_until_ready()``), never enter them; the analyzer's
@@ -16,6 +18,10 @@ from repro.obs.tracer import (RequestRecord, Tracer, NullTracer,
 from repro.obs.views import (occupancy_summary, percentiles,
                              phase_summary, request_latency_summary,
                              roofline_efficiency, summary_table)
+from repro.obs.windows import window_series, window_summary
+from repro.obs.slo import (SLOSpec, attainment, goodput,
+                           max_sustainable_rate, request_met,
+                           slo_report)
 from repro.obs.export import write_chrome_trace, write_jsonl
 
 __all__ = [
@@ -24,5 +30,8 @@ __all__ = [
     "RequestRecord", "Tracer", "NullTracer", "NULL_TRACER",
     "percentiles", "request_latency_summary", "phase_summary",
     "occupancy_summary", "roofline_efficiency", "summary_table",
+    "window_series", "window_summary",
+    "SLOSpec", "request_met", "attainment", "goodput", "slo_report",
+    "max_sustainable_rate",
     "write_jsonl", "write_chrome_trace",
 ]

@@ -9,12 +9,17 @@ array flavor) loadable in Perfetto / chrome://tracing: timed dispatch
 events (``dur_s`` present) become "X" complete events on a per-phase
 track, instant events become "i" marks, and each request's
 admit->done window becomes an "X" on a per-slot track so queueing,
-prefill and decode phases line up visually.
+prefill and decode phases line up visually.  With ``window_s`` set,
+the obs/windows.py per-window series additionally becomes "C"
+counter tracks (tokens/s, queue depth, occupancy/utilization, stall
+and prefix-hit rates) so load and engine health plot as graphs above
+the dispatch timeline.
 """
 
 from __future__ import annotations
 
 import json
+import math
 from typing import Dict
 
 from repro.obs.tracer import Tracer
@@ -59,8 +64,42 @@ def _us(t: float, t0: float) -> float:
     return (t - t0) * 1e6
 
 
-def write_chrome_trace(tracer: Tracer, path: str) -> int:
-    """Write Chrome trace-event JSON; returns events written."""
+# (counter name, window_series key) -> one "C" track each
+_COUNTER_TRACKS = (
+    ("tokens/s", "tokens_per_s"),
+    ("queue depth", "queue_depth_end"),
+    ("chunk occupancy", "chunk_occupancy"),
+    ("span utilization", "span_utilization"),
+    ("stalls", "stalls"),
+    ("prefix hit rate", "prefix_hit_rate"),
+)
+
+
+def _counter_events(tracer: Tracer, window_s: float) -> list:
+    """Per-window "C" counter samples (Perfetto draws step graphs).
+
+    Each window contributes one sample per track at its start time;
+    NaN-marked values (empty window, views.percentiles contract) are
+    skipped rather than serialized — NaN is not legal JSON and would
+    plot as a bogus zero anyway.
+    """
+    from repro.obs.windows import window_series
+    out = []
+    for w in window_series(tracer, window_s):
+        ts = w["t_start"] * 1e6
+        for name, key in _COUNTER_TRACKS:
+            v = w[key]
+            if isinstance(v, float) and math.isnan(v):
+                continue
+            out.append({"ph": "C", "pid": 1, "name": name,
+                        "ts": ts, "args": {name: v}})
+    return out
+
+
+def write_chrome_trace(tracer: Tracer, path: str, *,
+                       window_s: float = 0.0) -> int:
+    """Write Chrome trace-event JSON; returns events written.
+    ``window_s > 0`` adds the windowed counter tracks."""
     events = sorted(tracer.events, key=lambda e: e[0])
     if not events:
         with open(path, "w") as f:
@@ -108,6 +147,8 @@ def write_chrome_trace(tracer: Tracer, path: str) -> int:
                              "cached_tokens": rec.cached_tokens,
                              "ttft_s": rec.ttft_s,
                              "tpot_s": rec.tpot_s}})
+    if window_s > 0:
+        out.extend(_counter_events(tracer, window_s))
     with open(path, "w") as f:
         json.dump({"traceEvents": out, "displayTimeUnit": "ms"}, f,
                   default=_scalar)

@@ -141,8 +141,15 @@ class Tracer:
             r = self.requests[rid] = RequestRecord(rid)
         return r
 
-    def enqueue(self, rid: int, n_prompt: int, max_output: int) -> None:
-        t = self.clock()
+    def enqueue(self, rid: int, n_prompt: int, max_output: int,
+                t: Optional[float] = None) -> None:
+        """``t`` lets the open-loop serving path stamp the request's
+        *scheduled arrival* instead of the observation time: a request
+        that arrived mid-dispatch is only seen by the scheduler after
+        ``block_until_ready()``, but its queue delay (and TTFT) must
+        be charged from arrival (runtime/arrivals.py)."""
+        if t is None:
+            t = self.clock()
         r = self._rec(rid)
         r.t_enqueue = t
         r.n_prompt = n_prompt
@@ -210,7 +217,8 @@ class NullTracer:
     def span(self, kind: str, t0: float, t1: float, **args) -> None:
         pass
 
-    def enqueue(self, rid: int, n_prompt: int, max_output: int) -> None:
+    def enqueue(self, rid: int, n_prompt: int, max_output: int,
+                t: Optional[float] = None) -> None:
         pass
 
     def admit(self, rid: int, slot: int, cached_tokens: int,

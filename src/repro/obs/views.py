@@ -25,9 +25,17 @@ _QS = (50, 95, 99)
 
 def percentiles(xs: Sequence[float], qs: Sequence[int] = _QS
                 ) -> Dict[str, float]:
-    """Nearest-rank percentiles + mean; zeros on an empty input."""
+    """Nearest-rank percentiles + mean.
+
+    An empty input yields ``count=0`` with every statistic NaN-marked:
+    a window (or run) with zero finished requests has *undefined*
+    latency, and a silent 0.0 would read as an impossibly fast p99
+    downstream (dashboards, the regression gate).  Consumers branch on
+    ``count`` before comparing.
+    """
     if not xs:
-        return {**{f"p{q}": 0.0 for q in qs}, "mean": 0.0, "count": 0}
+        nan = float("nan")
+        return {**{f"p{q}": nan for q in qs}, "mean": nan, "count": 0}
     s = sorted(xs)
     out = {}
     for q in qs:

@@ -1100,36 +1100,39 @@ class ChunkedServer:
                                      self._slot_blocks[s][:nfull])
 
     # -- main loop ---------------------------------------------------------
+    def _reset_run_counters(self) -> None:
+        """Per-run metric state, shared by ``serve`` / ``serve_online``
+        (the tracer's event log, by contrast, accumulates across runs
+        until the caller clears it — warm/measured A/B runs call
+        ``tracer.clear()`` between waves)."""
+        self.metrics.reset()
+        if self.paged:
+            # pool metrics are per run, not per server lifetime
+            self.peak_blocks = self._blocks_in_use()
+            self.admission_stalls = 0
+            self.total_prompt_tokens = 0
+            self.cached_prompt_tokens = 0
+            self.prefix_hits = 0
+            self._evict0 = (self.prefix_cache.evicted_blocks
+                            if self.prefix_cache is not None else 0)
+        if self.spec_decode:
+            # spec metrics are per run too (the n-gram table persists
+            # across runs — warm drafts are a feature)
+            self.spec_steps = 0
+            self.spec_slot_steps = 0
+            self.spec_drafted = 0
+            self.spec_accepted = 0
+            self.spec_emitted = 0
+
     def serve(self, requests: List[Request]) -> Dict[str, float]:
         queue = list(requests)
-        # per-run metrics, mirroring the per-run counters below (the
-        # tracer's event log, by contrast, accumulates across serve()
-        # calls until the caller clears it — warm/measured A/B runs
-        # call tracer.clear() between waves)
-        self.metrics.reset()
+        self._reset_run_counters()
         if self.obs.enabled:
             for r in queue:
                 self.obs.enqueue(r.rid, len(r.prompt), r.max_new)
         t0 = time.perf_counter()
         served_tokens = 0
         prefill_tokens = 0
-        if self.paged:
-            # pool metrics are per serve() run, not per server lifetime
-            self.peak_blocks = self._blocks_in_use()
-            self.admission_stalls = 0
-            self.total_prompt_tokens = 0
-            self.cached_prompt_tokens = 0
-            self.prefix_hits = 0
-            evict0 = (self.prefix_cache.evicted_blocks
-                      if self.prefix_cache is not None else 0)
-        if self.spec_decode:
-            # spec metrics are per serve() run too (the n-gram table
-            # persists across runs — warm drafts are a feature)
-            self.spec_steps = 0
-            self.spec_slot_steps = 0
-            self.spec_drafted = 0
-            self.spec_accepted = 0
-            self.spec_emitted = 0
         while queue or any(r is not None for r in self.slot_req):
             self._admit(queue)
             if any(m == "prefill" for m in self.mode):
@@ -1141,6 +1144,102 @@ class ChunkedServer:
                     self._run_decode_span()
             served_tokens += self._harvest()
         dt = time.perf_counter() - t0
+        return self._run_stats(requests, dt, served_tokens,
+                               prefill_tokens)
+
+    def serve_online(self, stream, *,
+                     max_idle_sleep_s: float = 0.02) -> Dict[str, float]:
+        """Open-loop serving: admit by arrival time against a
+        monotonic clock (runtime/arrivals.py streams).
+
+        ``stream`` is a sequence of ``TimedRequest``-shaped objects
+        (``.t_arrival`` seconds from the loop epoch, ``.request`` a
+        ``Request``).  The loop anchors the epoch to
+        ``time.perf_counter()`` at entry and releases each request to
+        the admission queue only once the clock passes its stamp, so
+        the engine runs under sustained, bursty load instead of a
+        pre-loaded batch; between dispatches the scheduler re-polls
+        arrivals, and when fully drained with arrivals still pending
+        it sleeps (host-side, capped at ``max_idle_sleep_s``) until
+        the next stamp.
+
+        Telemetry contract: the tracer's enqueue timestamp is the
+        request's *scheduled arrival* (epoch + t_arrival), not the
+        moment the scheduler observed it — a request arriving
+        mid-dispatch is charged its queue delay (and therefore TTFT)
+        from arrival.  Everything else reuses the closed-batch
+        machinery verbatim: the same jitted work units (compile counts
+        unchanged), the same host mirrors (a warmed loop stays clean
+        under ``jax.transfer_guard("disallow")`` — the clock and the
+        sleep are host-only), and greedy outputs on a ``closed_stream``
+        are bit-identical to ``serve`` on the same requests.
+
+        Returns the ``serve`` stats plus online extras: realized
+        ``offered_rate_rps``, ``arrival_span_s``, idle/sleep seconds,
+        and the peak admission-queue depth (also tracked live in the
+        ``serving.queue.depth`` gauge for the windowed views).
+        """
+        arrivals = sorted(stream, key=lambda tr: tr.t_arrival)
+        requests = [tr.request for tr in arrivals]
+        self._reset_run_counters()
+        queue: List[Request] = []
+        served_tokens = 0
+        prefill_tokens = 0
+        idle_s = 0.0
+        peak_queue_depth = 0
+        next_i = 0
+        t0 = time.perf_counter()
+        while (next_i < len(arrivals) or queue
+               or any(r is not None for r in self.slot_req)):
+            now = time.perf_counter() - t0
+            while (next_i < len(arrivals)
+                   and arrivals[next_i].t_arrival <= now):
+                tr = arrivals[next_i]
+                next_i += 1
+                queue.append(tr.request)
+                if self.obs.enabled:
+                    self.obs.enqueue(tr.request.rid,
+                                     len(tr.request.prompt),
+                                     tr.request.max_new,
+                                     t=t0 + tr.t_arrival)
+            depth = len(queue)
+            peak_queue_depth = max(peak_queue_depth, depth)
+            self.metrics.gauge("serving.queue.depth").set(float(depth))
+            self._admit(queue)
+            if any(m == "prefill" for m in self.mode):
+                prefill_tokens += self._run_chunk_step()
+            elif any(m == "decode" for m in self.mode):
+                if self.spec_decode:
+                    self._run_spec_step()
+                else:
+                    self._run_decode_span()
+            elif not queue and next_i < len(arrivals):
+                # fully drained with arrivals still scheduled: sleep
+                # toward the next stamp instead of busy-spinning
+                wait = (t0 + arrivals[next_i].t_arrival
+                        - time.perf_counter())
+                if wait > 0:
+                    nap = min(wait, max_idle_sleep_s)
+                    time.sleep(nap)
+                    idle_s += nap
+            served_tokens += self._harvest()
+        dt = time.perf_counter() - t0
+        stats = self._run_stats(requests, dt, served_tokens,
+                                prefill_tokens)
+        span_s = arrivals[-1].t_arrival if arrivals else 0.0
+        stats.update({
+            "online": 1.0,
+            "arrival_span_s": float(span_s),
+            "offered_rate_rps": (len(arrivals) / span_s
+                                 if span_s > 0 else 0.0),
+            "idle_s": idle_s,
+            "peak_queue_depth": float(peak_queue_depth),
+        })
+        return stats
+
+    def _run_stats(self, requests: List[Request], dt: float,
+                   served_tokens: int, prefill_tokens: int
+                   ) -> Dict[str, float]:
         compiles = self.compile_counts()
         # phase counts/wall times come from the metrics registry the
         # dispatch methods feed (obs/metrics) — the registry is always
@@ -1216,7 +1315,7 @@ class ChunkedServer:
                     "prefix_hit_rate": (self.prefix_hits / len(requests)
                                         if requests else 0.0),
                     "cache_evictions": float(
-                        self.prefix_cache.evicted_blocks - evict0),
+                        self.prefix_cache.evicted_blocks - self._evict0),
                     "cached_blocks": float(
                         self.prefix_cache.cached_block_count()),
                 })

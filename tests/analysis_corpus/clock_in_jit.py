@@ -1,0 +1,62 @@
+"""Seeded violation: a WALL-CLOCK read inside a jitted body — the
+open-loop failure mode runtime/arrivals.py's convention forbids.
+
+``serve_online`` admits by arrival time against ``time.perf_counter()``
+read on the HOST, between dispatches.  The tempting wrong version is to
+read the clock *inside* the jitted step ("stamp each token as it's
+emitted"): a bare ``time.perf_counter()`` there silently returns trace
+time (a constant baked at compile), so the only working encoding is a
+host callback — and that callback primitive is exactly what JX001
+flags in the jaxpr.  The companion AST fixture is the same mistake one
+layer down: a latency helper on the hot path that forces the device
+value out with ``np.asarray`` to pair it with a host timestamp
+(AST001).
+
+Two fixtures, mirroring obs_in_jit.py:
+
+``timed_step``
+    JX001 — ``jax.pure_callback(...perf_counter...)`` smuggles a
+    wall-clock read into the traced serving step.
+
+``hot_impl`` -> ``_stamp_latency``
+    AST001 — the per-token "latency sample" pulls the step's output to
+    the host mid-dispatch.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+
+LATENCY_SAMPLES = []
+
+
+def _wall_clock(x):
+    # executes on the host at dispatch time: the clock read the author
+    # wanted, at the cost of a callback inside the program
+    LATENCY_SAMPLES.append(time.perf_counter())
+    return x
+
+
+def timed_step(x):
+    """JX001: per-step wall-clock stamp via a host callback in jit."""
+    h = checkpoint_name(
+        jnp.cumsum(x.astype(jnp.float32), axis=-1), "xshard_clock")
+    y = h.sum(axis=-1)
+    y = jax.pure_callback(
+        _wall_clock, jax.ShapeDtypeStruct(y.shape, y.dtype), y)
+    return checkpoint_name(y, "serving_hot_path")
+
+
+def _stamp_latency(y):
+    # AST001: pairing a host timestamp with the device value forces a
+    # device->host transfer on the hot path
+    LATENCY_SAMPLES.append((time.perf_counter(), np.asarray(y).max()))
+
+
+def hot_impl(x):
+    y = jnp.max(x * 2, axis=-1)
+    _stamp_latency(y)
+    return y

@@ -260,6 +260,48 @@ def test_obs_transfer_in_hot_path_fires_ast001():
     assert len(rep.findings) == 1
 
 
+def test_clock_read_in_jitted_body_fires_jx001():
+    # open-loop serving's failure mode: a wall-clock stamp smuggled
+    # into the jitted step via pure_callback (a bare perf_counter()
+    # would bake trace-time, so the callback is the only encoding)
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "clock_in_jit_corpus", _corpus("clock_in_jit.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    closed = jax.make_jaxpr(mod.timed_step)(jnp.zeros((4, 4)))
+    rep = Report()
+    jaxpr_check._check_jaxpr("corpus", "chunk_step", closed.jaxpr, {},
+                             rep)
+    assert rep.count("JX001") == 1
+    assert len(rep.findings) == 1
+
+
+def test_latency_stamp_transfer_fires_ast001():
+    # same mistake one layer down: the latency helper pairs a host
+    # timestamp with np.asarray(device_value) on the hot path
+    rep = Report()
+    ast_lint.run(rep, paths=[_corpus("clock_in_jit.py")],
+                 repo_root=REPO_ROOT,
+                 roots=[("clock_in_jit", "hot_impl")],
+                 parity_bodies={})
+    assert rep.count("AST001") == 1
+    assert len(rep.findings) == 1
+
+
+def test_ast_scan_covers_online_serving_modules():
+    """The online-serving observatory modules must fall inside
+    AST_SCAN_PACKAGES so the transfer gate scans them by default."""
+    scanned = {os.path.relpath(p, REPO_ROOT)
+               for p in ast_lint.collect_paths(REPO_ROOT)}
+    for rel in ("src/repro/runtime/arrivals.py",
+                "src/repro/runtime/server.py",
+                "src/repro/obs/windows.py",
+                "src/repro/obs/slo.py",
+                "src/repro/obs/tracer.py"):
+        assert rel in scanned, f"{rel} escapes the AST transfer gate"
+
+
 # ----------------------------------------------------------------------
 # clean runs: zero false positives on the repo
 # ----------------------------------------------------------------------

@@ -1,0 +1,123 @@
+"""Contract tests for runtime/elastic.py (elastic re-meshing).
+
+ROADMAP item 2 wires the elastic pair (remesh + sharding-agnostic
+checkpoint restore) into the serving runtime next; these pin the
+pure-math contracts — factorization completeness, best-shape
+preference, global-batch preservation — plus the mesh axes `remesh`
+actually builds, so that wiring lands on a fixed surface.
+"""
+
+import jax
+import pytest
+
+from repro.runtime.elastic import (best_shape, factorizations, remesh,
+                                   replan_batch)
+
+
+# ---------------------------------------------------------------- factorize
+def test_factorizations_enumerates_every_pair():
+    assert factorizations(12) == [(1, 12), (2, 6), (3, 4), (4, 3),
+                                  (6, 2), (12, 1)]
+
+
+def test_factorizations_square_and_prime_and_one():
+    # perfect square: the (root, root) pair appears exactly once
+    assert factorizations(16).count((4, 4)) == 1
+    assert factorizations(7) == [(1, 7), (7, 1)]
+    assert factorizations(1) == [(1, 1)]
+
+
+@pytest.mark.parametrize("n", [2, 6, 8, 24, 36])
+def test_factorizations_are_exact_products(n):
+    pairs = factorizations(n)
+    assert all(d * m == n for d, m in pairs)
+    assert len(set(pairs)) == len(pairs)
+    assert pairs == sorted(pairs)
+
+
+# ---------------------------------------------------------------- best_shape
+def test_best_shape_prefers_model_near_prefer_model():
+    # 8 devices, prefer model=16 -> model as large as possible: (1, 8)
+    assert best_shape(8) == (1, 8)
+    # prefer a small TP degree -> data-parallel heavy shape
+    assert best_shape(8, prefer_model=2) == (4, 2)
+    assert best_shape(8, prefer_model=1) == (8, 1)
+
+
+def test_best_shape_exact_preference_available():
+    assert best_shape(32, prefer_model=4) == (8, 4)
+    assert best_shape(16, prefer_model=16) == (1, 16)
+
+
+def test_best_shape_max_model_caps_tp_degree():
+    # survivors' best model axis may not exceed the old TP degree,
+    # else TP-sharded dims stop dividing
+    assert best_shape(8, max_model=2) == (4, 2)
+    assert best_shape(8, max_model=1) == (8, 1)
+    data, model = best_shape(12, max_model=4, prefer_model=16)
+    assert model <= 4 and data * model == 12
+
+
+def test_best_shape_prime_survivor_count():
+    # a prime count only factors trivially; max_model forces (n, 1)
+    assert best_shape(7, max_model=4) == (7, 1)
+
+
+def test_best_shape_always_factors_the_device_count():
+    for n in (1, 2, 3, 4, 5, 6, 8, 12, 16):
+        data, model = best_shape(n, prefer_model=4)
+        assert data * model == n
+
+
+# ---------------------------------------------------------------- remesh
+def test_remesh_builds_data_model_mesh_over_survivors():
+    devs = jax.devices()
+    mesh = remesh(devs)
+    assert mesh.axis_names == ("data", "model")
+    data, model = best_shape(len(devs))
+    assert mesh.devices.shape == (data, model)
+
+
+def test_remesh_respects_max_model():
+    devs = jax.devices()
+    mesh = remesh(devs, max_model=1)
+    assert mesh.devices.shape == (len(devs), 1)
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs a multi-device host")
+def test_remesh_after_losing_a_device():
+    # simulate losing one host: remesh the survivors
+    devs = jax.devices()[:-1] if jax.device_count() > 2 else \
+        jax.devices()[:1]
+    mesh = remesh(devs)
+    assert mesh.devices.size == len(devs)
+    assert set(mesh.devices.ravel()) == set(devs)
+
+
+# ---------------------------------------------------------------- replan
+def test_replan_batch_keeps_divisible_global_batch():
+    assert replan_batch(32, old_data=8, new_data=4) == 32
+    assert replan_batch(12, old_data=4, new_data=3) == 12
+
+
+def test_replan_batch_rounds_to_nearest_divisible():
+    # 32 over 6 survivors: 32/6 -> 5.33 -> 5 per device -> 30 global
+    assert replan_batch(32, old_data=8, new_data=6) == 30
+    # 32 over 5: 6.4 -> 6 per device -> 30
+    assert replan_batch(32, old_data=8, new_data=5) == 30
+    # rounding up when nearer: 10 over 4 -> 2.5 -> round 2 -> 8
+    assert replan_batch(10, old_data=2, new_data=4) == 8
+
+
+def test_replan_batch_never_returns_zero():
+    # a tiny global batch over many survivors still serves something
+    assert replan_batch(1, old_data=1, new_data=4) == 4
+    assert replan_batch(2, old_data=1, new_data=8) == 8
+
+
+def test_replan_batch_result_divides_evenly():
+    for gb in (1, 7, 16, 33):
+        for nd in (1, 2, 3, 5, 8):
+            out = replan_batch(gb, old_data=1, new_data=nd)
+            assert out % nd == 0 and out >= nd
