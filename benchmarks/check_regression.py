@@ -13,6 +13,11 @@ by walking the two JSON trees in parallel:
     True -> False is a correctness regression, never a perf tradeoff)
     and compile counts must not grow (the O(1)-programs contract);
     these fail at any tolerance;
+  * **p-value floors** — keys ending ``pvalue`` (the sampling
+    section's seeded KS test) are distribution-identity evidence, not
+    perf: the candidate passes iff its own value clears the 0.01
+    floor, with no baseline ratio (p-values of a true null are
+    uniform, so candidate/baseline deltas are pure noise);
   * **higher-is-better** metrics (``*tokens_per_s``, ``*_tok_s``,
     speedups, rates, attainment) fail when the candidate drops more
     than ``tolerance`` (default 10%) below the baseline;
@@ -44,7 +49,8 @@ from typing import Any, List, Tuple
 
 HIGHER_BETTER_SUFFIXES = (
     "tokens_per_s", "_tok_s", "speedup", "speedup_warm",
-    "speedup_vs_tp1", "attainment", "max_sustainable_rps", "hit_rate",
+    "speedup_vs_tp1", "attainment", "attainment_strict",
+    "max_sustainable_rps", "hit_rate",
     "acceptance_rate", "tokens_per_step", "goodput_tok_s",
     "throughput_tok_s", "utilization", "occupancy",
 )
@@ -112,6 +118,14 @@ def _walk(base: Any, cand: Any, path: Tuple[str, ...],
         rows.append({"path": path, "base": base, "cand": cand,
                      "status": "OK" if cand <= base else "REGRESSION",
                      "rule": "compile-count"})
+        return
+    if path and path[-1].endswith("pvalue"):
+        # absolute floor, no baseline ratio: under the null the
+        # p-value is uniform on [0,1], so only "did the candidate
+        # fall below significance" is signal
+        rows.append({"path": path, "base": base, "cand": cand,
+                     "status": "OK" if cand > 0.01 else "REGRESSION",
+                     "rule": "p-value-floor"})
         return
     rows.append({"path": path, "base": base, "cand": cand,
                  "rule": _direction(path)})

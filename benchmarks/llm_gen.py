@@ -58,6 +58,16 @@ an obs-overhead A/B on the full-featured ShareGPT config: traced vs
 untraced greedy outputs must stay bit-identical with unchanged compile
 counts, and the best-of-3 tokens/s delta bounds the tracer's cost.
 
+A sampling pass A/Bs the stochastic head (models/sampling) on the
+float32 run: a temperature=0 wave must be bit-identical to greedy on
+the same compiled programs (the greedy<->sampled flip is in operand
+values — zero program growth across a greedy -> t=0 -> stochastic
+wave sequence), sampled speculative decoding must emit exactly the
+non-speculative sampled tokens given the same per-request seeds, and
+a disjoint-seed K=4 vs K=0 run must draw from the same distribution
+(two-sample KS over >=200 emitted tokens each; check_regression gates
+the recorded ``ks_pvalue`` on an absolute 0.01 floor).
+
 An online pass replays the ShareGPT and sysprompt mixes as open-loop
 Poisson streams (runtime/arrivals) through ``serve_online``: a
 closed-stream A/B pins bit-exact greedy parity, equal compile counts
@@ -677,6 +687,105 @@ def llm_generation():
             0.0, 0, 1,
             derived=online_sec["sharegpt"]["sweep"][1]["goodput_tok_s"],
             derived_name="tokens_per_s"))
+        # stochastic sampling (models/sampling): the greedy<->sampled
+        # flip lives in operand VALUES on the same compiled programs,
+        # so one server serves a greedy wave, a temperature=0 "sampled"
+        # wave (must be bit-identical — the degenerate head IS argmax)
+        # and a genuinely stochastic wave with zero program growth.
+        # Speculative sampling is exact-match-given-seed with the
+        # non-speculative sampled path, and distribution-identical
+        # across disjoint seeds (seeded two-sample KS over the emitted
+        # tokens, K>0 vs K=0; check_regression gates the p-value on an
+        # absolute 0.01 floor, not a baseline ratio).
+        if dtype_name != "float32":
+            sampling_sec = {"skipped": True,
+                            "reason": "sampling A/B measured on the "
+                                      "float32 pass"}
+        else:
+            samp_kw = dict(batch_slots=4, max_len=96, chunk=16, span=8,
+                           paged=True, block_size=16, prefix_cache=True)
+            s_srv = ChunkedServer(cfg, params, **samp_kw)
+            s_srv.serve(clone_requests(base_reqs))    # compile warmup
+            s_ref = clone_requests(base_reqs)
+            s_srv.serve(s_ref)                        # greedy reference
+            t0_run = clone_requests(base_reqs)
+            for r in t0_run:
+                r.sampling = api.SamplingParams(temperature=0.0,
+                                                seed=11)
+            s_srv.serve(t0_run)
+            greedy_parity = all(a.output == b.output
+                                for a, b in zip(s_ref, t0_run))
+            st_run = clone_requests(base_reqs)
+            for i, r in enumerate(st_run):
+                r.sampling = api.SamplingParams(
+                    temperature=0.8, top_k=40, top_p=0.95, seed=100 + i)
+            s_srv.serve(st_run)
+            stochastic = any(a.output != b.output
+                             for a, b in zip(s_ref, st_run))
+            s_counts = dict(s_srv.compile_counts())
+            flip_compiles = {k: s_counts.get(k, 0) for k in
+                             ("chunk_step", "decode_span", "verify_step")}
+
+            srep = repetitive_requests(16, cfg.vocab_size, motif_len=8,
+                                       reps=3, max_output=16, seed=12)
+
+            def _sampled_wave(seed0, temperature, top_k, *,
+                              warm=False, **kw):
+                wsrv = ChunkedServer(cfg, params, **{**samp_kw, **kw})
+                if warm:
+                    # a greedy wave teaches the n-gram suffix table the
+                    # mix's continuations; draft quality only moves the
+                    # acceptance rate, never the sampled tokens
+                    wsrv.serve(clone_requests(srep))
+                rs = clone_requests(srep)
+                for i, r in enumerate(rs):
+                    r.sampling = api.SamplingParams(
+                        temperature=temperature, top_k=top_k,
+                        seed=seed0 + i)
+                wstats = wsrv.serve(rs)
+                return rs, wstats
+
+            # top_k=4 keeps the sampled support tight enough that the
+            # greedy-taught drafts are accepted at a measurable rate
+            # on random-init (near-flat) logits; exact-match holds at
+            # ANY acceptance rate, this just makes the recorded
+            # acceptance a real number instead of ~0
+            ex_plain, _ = _sampled_wave(300, 0.5, 4)
+            ex_spec, ex_stats = _sampled_wave(300, 0.5, 4,
+                                              spec_decode=4, warm=True)
+            spec_exact = all(a.output == b.output
+                             for a, b in zip(ex_plain, ex_spec))
+            ks_k0, _ = _sampled_wave(0, 1.0, 0)
+            ks_k4, _ = _sampled_wave(1000, 1.0, 0, spec_decode=4,
+                                     warm=True)
+            draws_a = np.concatenate(
+                [np.asarray(r.output) for r in ks_k0])
+            draws_b = np.concatenate(
+                [np.asarray(r.output) for r in ks_k4])
+            ks_d, ks_p = api.ks_two_sample(draws_a, draws_b)
+            sampling_sec = {
+                "greedy_parity": bool(greedy_parity),
+                "sampled_is_stochastic": bool(stochastic),
+                "flip_compile_counts": flip_compiles,
+                "spec_exact_match_given_seed": bool(spec_exact),
+                "spec_acceptance_rate":
+                    ex_stats["spec_acceptance_rate"],
+                "ks_draws_k0": float(len(draws_a)),
+                "ks_draws_k4": float(len(draws_b)),
+                "ks_D": ks_d,
+                "ks_pvalue": ks_p,
+            }
+            rows.append(Timing(
+                f"measured(cpu)/sampling-greedy-parity/{dtype_name}",
+                0.0, 0, 1, derived=float(greedy_parity),
+                derived_name="bool"))
+            rows.append(Timing(
+                f"measured(cpu)/sampling-spec-exact/{dtype_name}",
+                0.0, 0, 1, derived=float(spec_exact),
+                derived_name="bool"))
+            rows.append(Timing(
+                f"measured(cpu)/sampling-ks-pvalue/{dtype_name}",
+                0.0, 0, 1, derived=ks_p, derived_name="p"))
         SERVING_RESULTS[dtype_name] = {
             "slot_tokens_per_s": slot_stats["tokens_per_s"],
             "chunked_tokens_per_s": stats["tokens_per_s"],
@@ -736,6 +845,7 @@ def llm_generation():
             "tp": tp_sec,
             "latency": latency_sec,
             "online": online_sec,
+            "sampling": sampling_sec,
         }
     # paper reference points (H800, llama-2-7B)
     for name, tps in (("paper/H800/llama2-7B/fp32", 568.91),

@@ -4,10 +4,16 @@ Works on source text only (no imports, no tracing):
 
 * **AST001** — host-transfer calls (``.item()``, ``np.asarray``/
   ``np.array``, ``jax.device_get``/``device_put``,
-  ``.block_until_ready()``) inside a *hot-path body*: any function
+  ``.block_until_ready()``) — or HOST RNG calls (``np.random.*``, the
+  stdlib ``random`` module) — inside a *hot-path body*: any function
   statically reachable from the jitted serving roots
   (contracts.HOT_PATH_ROOTS) through a conservative call graph
   (module-level calls, imported-module calls, ``self.`` method calls).
+  Host RNG in a jitted body is the sampling-era twin of a host
+  transfer: the draw either bakes in at trace time or forces a
+  callback round-trip, where the contract requires the device-side
+  ``jax.random`` threefry keyed by (seed, position)
+  (models/sampling.py).
 * **AST002** — ``@`` / ``dot`` / ``einsum`` / ``dot_general`` inside
   the parity-critical attention bodies (contracts.PARITY_BODIES) that
   must phrase scores and PV as explicit multiply+``jnp.sum``.
@@ -164,6 +170,18 @@ def _check_transfers(mod: ModuleInfo, qual: str, node: ast.AST,
                 hit = f"{f.value.id}.{f.attr}()"
             elif f.value.id in jax_al and f.attr in _JAX_TRANSFERS:
                 hit = f"{f.value.id}.{f.attr}()"
+            elif mod.mod_aliases.get(f.value.id) == "random":
+                # stdlib random module (`from jax import random`
+                # resolves to "jax.random" and stays allowed)
+                hit = f"{f.value.id}.{f.attr}() [host RNG]"
+        elif isinstance(f.value, ast.Attribute) \
+                and isinstance(f.value.value, ast.Name) \
+                and f.value.value.id in np_al \
+                and f.value.attr == "random":
+            # np.random.<anything>: host RNG smuggled into a span —
+            # sampling must go through the device-side jax.random
+            # threefry keyed by (seed, position)
+            hit = f"{f.value.value.id}.random.{f.attr}() [host RNG]"
         if hit:
             report.add(Finding(
                 "AST001",

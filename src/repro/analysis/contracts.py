@@ -74,6 +74,9 @@ def serving_combos(device_count: int = 1,
     constraints (kernel/fp8_kv need paged; fp8_linear is tp=1 dense;
     spec_decode < chunk off-paged; tp needs devices).  Paired-down but
     covering every flag both ways and the interesting interactions."""
+    from repro.models.sampling import SamplingParams
+    sampled = SamplingParams(temperature=0.8, top_k=40, top_p=0.95,
+                             seed=7)
     combos: List[Dict[str, Any]] = [
         {},                                         # paged + prefix (defaults)
         {"prefix_cache": False},
@@ -89,6 +92,13 @@ def serving_combos(device_count: int = 1,
         {"fp8_kv": True, "kernel": True, "spec_decode": 3},
         {"fp8_linear": True},
         {"fp8_linear": True, "fp8_kv": True, "kernel": True},
+        # stochastic sampling: greedy<->sampled must share one
+        # signature per program (sampling operands are always present;
+        # the flip is in the VALUES) — JX005 proves no recompile, and
+        # JX001 that the device-side threefry draw smuggles no host
+        # callback into the span
+        {"sampling": sampled},
+        {"sampling": sampled, "spec_decode": 3},
     ]
     if device_count >= 2:
         combos += [
@@ -105,7 +115,7 @@ def serving_combos(device_count: int = 1,
 def combo_label(combo: Dict[str, Any]) -> str:
     base = {"paged": True, "prefix_cache": True, "spec_decode": 0,
             "kernel": False, "fp8_kv": False, "fp8_linear": False,
-            "tp": 1, "eos_id": None}
+            "tp": 1, "eos_id": None, "sampling": None}
     base.update(combo)
     parts = []
     for k, v in base.items():

@@ -156,13 +156,18 @@ def serving_programs(srv) -> List[Tuple[str, Any, Any, tuple]]:
     B, C = srv.B, srv.chunk
     i32 = np.int32
     vec = np.zeros(B, i32)
+    fvec = np.zeros(B, np.float32)
     flag = np.zeros(B, bool)
     tokens = np.zeros((B, C), i32)
     bt = srv._device_block_table()
+    # per-slot sampling operands (temperature, top_k, top_p, seed) —
+    # always present, greedy is encoded in the values (JX005 proves
+    # greedy<->sampled flips share one signature)
+    samp = (fvec, vec, np.ones(B, np.float32), vec)
     chunk_ops = (srv.params, srv.cache, srv.cur_tok, srv.out_buf,
-                 tokens, vec, vec, flag, flag, vec, bt)
+                 tokens, vec, vec, flag, flag, vec) + samp + (bt,)
     span_ops = (srv.params, srv.cache, srv.cur_tok, srv.out_buf,
-                vec, vec, flag, vec, bt)
+                vec, vec, flag, vec) + samp + (bt,)
     programs = [
         ("chunk_step", srv._chunk_impl, srv._chunk_fn,
          _abstract(chunk_ops)),
@@ -171,7 +176,8 @@ def serving_programs(srv) -> List[Tuple[str, Any, Any, tuple]]:
     ]
     if srv.spec_decode:
         verify_ops = (srv.params, srv.cache, srv.ngram_table,
-                      srv.cur_tok, srv.out_buf, vec, vec, flag, vec, bt)
+                      srv.cur_tok, srv.out_buf, vec, vec, flag,
+                      vec) + samp + (bt,)
         programs.append(("verify_step", srv._spec_impl, srv._verify_fn,
                          _abstract(verify_ops)))
     return programs

@@ -7,6 +7,7 @@ Used by launch/{dryrun,train,serve}.py, tests and benchmarks:
     init_cache / prefill / decode_step          serving
     chunk_step                                  chunked-prefill serving
     verify_step                                 speculative-decode verify
+    SamplingParams / sample_tokens              stochastic sample head
     compile_count                               jit program-cache probe
     input_specs / make_batch                    shape cells (dry-run / smoke)
     model_flops                                 6ND-style accounting
@@ -22,6 +23,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import common, encdec, hybrid, ssm_lm, transformer
 from repro.models.common import ParamSpec
+from repro.models.sampling import (GREEDY, SamplingParams,  # noqa: F401
+                                   ks_two_sample, sample_tokens)
 
 Params = Dict[str, Any]
 
@@ -140,10 +143,13 @@ def verify_step(cfg: ModelConfig, params: Params, cache: Params,
                 block_table: Optional[jax.Array] = None, **fwd_kw
                 ) -> Tuple[jax.Array, Params]:
     """Speculative-decode verify: score a [B, C] window of (current
-    token + C-1 drafts) per slot and return the greedy argmax at every
+    token + C-1 drafts) per slot and return the next-token id at every
     row (`chunk_step` returns only the last valid row's logits).  One
     fixed-shape program — the serving runtime's spec-decode path
-    (runtime/spec_decode.py) compiles it exactly once."""
+    (runtime/spec_decode.py) compiles it exactly once.  Pass
+    ``sample=(temp, top_k, top_p, seed)`` through ``fwd_kw`` to swap
+    the greedy argmax chain for the stochastic sample head (see
+    transformer.verify_step)."""
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.verify_step(cfg, params, cache, tokens, pos,
                                        block_table, **fwd_kw)

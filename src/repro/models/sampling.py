@@ -1,0 +1,188 @@
+"""Stochastic sampling heads for the serving engine.
+
+Temperature / top-k / top-p sampling with per-request seeds, built so
+the serving paths can share ONE compiled program with greedy decoding
+and stay inside the transfer-free span contract:
+
+* **Device-resident RNG, position-keyed.** The draw for the token that
+  will sit at sequence position ``q`` of slot ``b`` uses
+  ``jax.random.fold_in(jax.random.PRNGKey(seed_b), q)`` computed
+  *inside* the jitted body — threefry compiles natively, so no host
+  RNG round-trip ever appears in a span (JX001/AST001 enforce this
+  statically).  Keying by position rather than carrying a split-chain
+  makes the draw a pure function of ``(seed, position)``: the chunked
+  path, the span loop, and the speculative verify path all compute the
+  *same* key for the same emitted position, which is what makes
+  spec-decode sampling exact-match-given-seed to the non-speculative
+  sampled path (and K=0 vs K>0 distributions identical by
+  construction).
+* **Always-present operands.** Greedy is encoded in the operand
+  *values* (``temperature=0`` / ``top_k=1``), not the program: the
+  sample head computes both the argmax token (on the original-dtype
+  logits, bit-identical to the historical greedy head) and the sampled
+  token, then selects with ``jnp.where``.  Flipping a request between
+  greedy and sampled therefore never recompiles (JX005).
+* **fp32 distribution.** The sampled distribution is always formed in
+  float32 — logits are upcast before temperature scaling, the softmax
+  runs in fp32, and the gumbel noise is fp32 — so bf16 serving samples
+  from the same distribution as fp32 serving up to logit rounding.
+
+The draw itself is gumbel-max: ``argmax(z + g)`` over the masked,
+temperature-scaled fp32 logits ``z`` with ``g ~ Gumbel(0,1)`` is an
+exact sample from ``softmax(z)`` restricted to the unmasked support,
+so no inverse-CDF search is needed and top-k/top-p masking composes as
+plain ``-inf`` writes.
+
+``ks_two_sample`` is a scipy-free two-sample Kolmogorov–Smirnov test
+(asymptotic p-value, Numerical-Recipes series) used by the BENCH
+``sampling`` section to check the K>0 token distribution against K=0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    ``temperature <= 0`` or ``top_k == 1`` selects greedy decoding
+    (bit-identical to the historical argmax head).  ``top_k == 0``
+    means "no top-k truncation"; ``top_p == 1.0`` means "no nucleus
+    truncation".  ``seed`` is the per-request RNG seed — two requests
+    with the same seed and the same emission positions draw the same
+    noise.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if not (0.0 < self.top_p <= 1.0):
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0 or self.top_k == 1
+
+    def __str__(self) -> str:
+        if self.is_greedy:
+            return "greedy"
+        parts = [f"t{self.temperature:g}"]
+        if self.top_k:
+            parts.append(f"k{self.top_k}")
+        if self.top_p < 1.0:
+            parts.append(f"p{self.top_p:g}")
+        parts.append(f"s{self.seed}")
+        return ":".join(parts)
+
+
+GREEDY = SamplingParams()
+
+
+def _sample_row(logits, temp, top_k, top_p, seed, index):
+    """Sample one token from a single ``[V]`` logits row.
+
+    ``index`` is the sequence position the token will occupy — the
+    sole per-draw RNG input besides the request seed (see module
+    docstring).  Returns int32.
+    """
+    vocab = logits.shape[-1]
+    # greedy token on the ORIGINAL dtype logits: bit-identical to the
+    # historical `jnp.argmax(logits, -1)` head when selected below
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    x = logits.astype(jnp.float32)
+    safe_t = jnp.where(temp > 0.0, temp, jnp.float32(1.0))
+    z = x / safe_t
+    # top-k: threshold at the k-th largest scaled logit (ties at the
+    # threshold all survive; top_k outside (0, V) disables the mask)
+    k_on = (top_k > 0) & (top_k < vocab)
+    sorted_z = jnp.sort(z)[::-1]
+    kth = sorted_z[jnp.clip(top_k - 1, 0, vocab - 1)]
+    keep_k = jnp.where(k_on, z >= kth, True)
+    z = jnp.where(keep_k, z, -jnp.inf)
+    # fp32 softmax of the temperature-scaled, top-k-masked distribution
+    probs = jax.nn.softmax(z)
+    # top-p: keep the smallest prefix of the probability-sorted vocab
+    # whose mass reaches top_p (the head of the nucleus always stays)
+    order = jnp.argsort(-probs)
+    csum = jnp.cumsum(probs[order])
+    keep_sorted = (csum - probs[order]) < top_p
+    keep_p = jnp.zeros((vocab,), bool).at[order].set(keep_sorted)
+    p_on = top_p < 1.0
+    z = jnp.where(p_on & ~keep_p, -jnp.inf, z)
+    # gumbel-max: argmax(z + g) is an exact draw from softmax(z) on
+    # the surviving support, keyed purely by (seed, position)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), index)
+    g = jax.random.gumbel(key, (vocab,), jnp.float32)
+    sampled = jnp.argmax(z + g).astype(jnp.int32)
+    return jnp.where((temp <= jnp.float32(0.0)) | (top_k == 1),
+                     greedy_tok, sampled)
+
+
+def sample_tokens(logits, temp, top_k, top_p, seed, index):
+    """Vectorized sample head.
+
+    ``logits`` is ``[B, V]`` (chunk/span heads) or ``[B, C, V]``
+    (verify head); ``temp``/``top_p`` are f32 ``[B]``,
+    ``top_k``/``seed`` int32 ``[B]``; ``index`` holds the emission
+    positions, shaped ``[B]`` or ``[B, C]`` to match.  Returns int32
+    tokens shaped like ``index``.
+    """
+    if logits.ndim == 2:
+        return jax.vmap(_sample_row)(logits, temp, top_k, top_p, seed,
+                                     index)
+    row = jax.vmap(_sample_row,
+                   in_axes=(0, None, None, None, None, 0))
+    return jax.vmap(row)(logits, temp, top_k, top_p, seed, index)
+
+
+def ks_two_sample(a, b):
+    """Two-sample Kolmogorov–Smirnov test, scipy-free.
+
+    Returns ``(D, p)`` where ``D`` is the sup-distance between the
+    empirical CDFs and ``p`` the asymptotic two-sided p-value via the
+    Kolmogorov series ``p = 2 * sum_j (-1)^{j-1} exp(-2 j^2 lam^2)``
+    with ``lam = (en + 0.12 + 0.11/en) * D``,
+    ``en = sqrt(n*m/(n+m))`` (Numerical Recipes §14.3).  Empty inputs
+    return ``(nan, nan)``.
+    """
+    a = np.sort(np.asarray(a, np.float64))
+    b = np.sort(np.asarray(b, np.float64))
+    n, m = len(a), len(b)
+    if n == 0 or m == 0:
+        return float("nan"), float("nan")
+    grid = np.concatenate([a, b])
+    cdf_a = np.searchsorted(a, grid, side="right") / n
+    cdf_b = np.searchsorted(b, grid, side="right") / m
+    d = float(np.max(np.abs(cdf_a - cdf_b)))
+    en = math.sqrt(n * m / (n + m))
+    lam = (en + 0.12 + 0.11 / en) * d
+    p = 0.0
+    converged = False
+    for j in range(1, 101):
+        term = 2.0 * (-1.0) ** (j - 1) * math.exp(-2.0 * j * j
+                                                  * lam * lam)
+        p += term
+        if abs(term) < 1e-12:
+            converged = True
+            break
+    if not converged:
+        # lam ~ 0 (identical samples): the alternating series never
+        # settles; the distribution-function limit there is p = 1
+        p = 1.0
+    return d, float(min(max(p, 0.0), 1.0))

@@ -19,6 +19,7 @@ from jax.ad_checkpoint import checkpoint_name
 from repro.models import attention as attn
 from repro.models import mlp as mlp_mod
 from repro.models import moe as moe_mod
+from repro.models import sampling
 from repro.models.common import (ParamSpec, apply_norm, apply_rope,
                                  chunked_softmax_xent, cross_entropy,
                                  norm_spec)
@@ -411,8 +412,8 @@ def chunk_step(cfg, params, cache: Params, tokens: jax.Array,
 def verify_step(cfg, params, cache: Params, tokens: jax.Array,
                 pos: jax.Array, block_table: Optional[jax.Array] = None,
                 *, kernel: bool = False, quant: Optional[Params] = None,
-                mesh=None, mesh_axis: Optional[str] = None
-                ) -> Tuple[jax.Array, Params]:
+                mesh=None, mesh_axis: Optional[str] = None,
+                sample=None) -> Tuple[jax.Array, Params]:
     """Speculative-decode verify: score a [B, C] window (row 0 = each
     slot's current token, rows 1..C-1 = draft tokens) in ONE fixed-shape
     call and return the greedy argmax at EVERY row, not just the last.
@@ -430,13 +431,30 @@ def verify_step(cfg, params, cache: Params, tokens: jax.Array,
     the paged block table's allocated entries, were dropped at scatter
     time — see attention.update_paged_cache).
 
-    Returns (preds [B, C] int32 greedy next-token ids, cache).
+    ``sample=(temp, top_k, top_p, seed)`` (each ``[B]``) swaps the
+    per-row argmax for the stochastic sample head
+    (models/sampling.sample_tokens): row j's token is drawn from the
+    fp32 softmax of its logits with the key folded from
+    ``(seed[b], pos[b] + 1 + j)`` — the same position key the span
+    loop would use emitting that token one at a time, which is what
+    keeps spec-decode sampling exact-match-given-seed.  Greedy rows
+    (``temp<=0`` or ``top_k==1``) stay bit-identical to the argmax
+    chain.  ``sample=None`` keeps the historical greedy head.
+
+    Returns (preds [B, C] int32 next-token ids, cache).
     """
     x, cache = _chunk_fwd(cfg, params, cache, tokens, pos, block_table,
                           kernel=kernel, quant=quant, mesh=mesh,
                           mesh_axis=mesh_axis)
     logits = logits_fn(cfg, params, x)                        # [B,C,V]
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    if sample is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    temp, top_k, top_p, seed = sample
+    C = tokens.shape[1]
+    index = pos[:, None] + 1 + jnp.arange(C, dtype=jnp.int32)  # [B,C]
+    preds = sampling.sample_tokens(logits, temp, top_k, top_p, seed,
+                                   index)
+    return preds, cache
 
 
 def prefill(cfg, params, tokens: jax.Array, cache: Params,

@@ -19,8 +19,15 @@ single-token response has no inter-token gaps, so only its TTFT
 deadline applies.  ``attainment(tracer, slo)`` is the fraction of
 finished requests that meet the SLO; it is NaN when nothing finished
 (a run that served nothing did not "attain 100%").  Requests still in
-flight at trace time are excluded — the serving protocols here run
-streams to completion, so in the benchmarked runs finished == issued.
+flight at trace time have no verdict and are excluded from plain
+``attainment`` — but NOT silently: they are counted in ``unfinished``
+and charged as misses by ``attainment_strict`` =
+``met / (finished + unfinished)``, because a totally overloaded run
+that finishes 2 of 200 requests must not report attainment 1.0 from
+the two that squeaked through.  ``attainment_strict`` (NaN only when
+nothing was issued at all) is what the ``online`` BENCH section and
+``check_regression`` gate on; on the benchmarked run-to-completion
+streams unfinished == 0 and the two metrics coincide.
 
 **Goodput.**  Output tokens from SLO-met requests per wall-second:
 
@@ -80,10 +87,14 @@ def request_met(rec: RequestRecord, slo: SLOSpec) -> Optional[bool]:
 def attainment(tracer: Tracer, slo: SLOSpec) -> Dict[str, float]:
     """Fraction of finished requests meeting the SLO (docstring above
     for the exact predicate), with a per-deadline breach breakdown."""
-    finished = met = ttft_miss = tpot_miss = 0
+    finished = met = unfinished = ttft_miss = tpot_miss = 0
     for rec in tracer.request_records():
         verdict = request_met(rec, slo)
         if verdict is None:
+            # no verdict yet: excluded from plain attainment, but a
+            # request still stuck in queue at trace time is the most
+            # severe miss there is — attainment_strict charges it
+            unfinished += 1
             continue
         finished += 1
         if verdict:
@@ -93,9 +104,13 @@ def attainment(tracer: Tracer, slo: SLOSpec) -> Dict[str, float]:
                 ttft_miss += 1
             if rec.tpot_s is not None and rec.tpot_s > slo.tpot_s:
                 tpot_miss += 1
+    issued = finished + unfinished
     return {"finished": finished, "met": met,
+            "unfinished": unfinished,
             "attainment": (met / finished if finished
                            else float("nan")),
+            "attainment_strict": (met / issued if issued
+                                  else float("nan")),
             "ttft_misses": ttft_miss, "tpot_misses": tpot_miss}
 
 
@@ -137,10 +152,17 @@ def max_sustainable_rate(
     the highest rate that still attains the SLO.
 
     ``run_at_rate(rate)`` must serve an open-loop stream at that rate
-    and return a dict containing ``attainment`` (e.g. ``slo_report``).
-    Returns the knee (``max_sustainable_rps``, NaN if no swept rate
-    attains the target) plus the full sweep trajectory so callers can
-    plot the attainment cliff rather than trust a single point.
+    and return a dict containing ``attainment_strict`` (preferred; it
+    charges unfinished requests) or ``attainment`` (e.g.
+    ``slo_report`` supplies both).  Returns the knee
+    (``max_sustainable_rps``, NaN if no swept rate attains the target)
+    plus the full sweep trajectory — every swept rate stays in it with
+    an ``attained`` verdict, so callers can plot the attainment cliff
+    rather than trust a single point.  A NaN attainment (nothing
+    finished at that rate — the server drowned) is an explicit miss,
+    never a silently dropped row: a rate that serves nothing must not
+    be skipped over while a lower rate stands as "sustainable" beyond
+    it, and an all-NaN sweep yields a NaN knee, not a crash.
     """
     if not rates:
         raise ValueError("need at least one rate to sweep")
@@ -149,9 +171,12 @@ def max_sustainable_rate(
     for rate in sorted(rates):
         rep = dict(run_at_rate(rate))
         rep["rate_rps"] = rate
+        att = rep.get("attainment_strict",
+                      rep.get("attainment", float("nan")))
+        attained = (not math.isnan(att)) and att >= target_attainment
+        rep["attained"] = attained
         sweep.append(rep)
-        att = rep.get("attainment", float("nan"))
-        if not math.isnan(att) and att >= target_attainment:
+        if attained:
             best = rate
     return {"max_sustainable_rps": best,
             "target_attainment": target_attainment,

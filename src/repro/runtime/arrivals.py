@@ -69,7 +69,16 @@ def poisson_stream(reqs: Sequence[Request], rate: float, *,
     """Stamp ``reqs`` with Poisson-process arrivals at ``rate``
     requests/second: i.i.d. exponential gaps with mean ``1/rate``,
     first arrival one gap after the epoch.  Deterministic per seed so
-    rate sweeps and A/B runs replay identical traffic."""
+    rate sweeps and A/B runs replay identical traffic.
+
+    Convention, pinned (tests/test_online.py regression-tests it
+    against a reference cumsum): arrival k lands at
+    ``cumsum(gaps)[k]``, so the FIRST request arrives one full gap
+    after t=0, never at the epoch itself.  This keeps
+    ``offered_rate``'s ``n / t_last`` denominator spanning exactly the
+    n gaps that produced the n arrivals — stamping request 0 at t=0
+    instead would count n arrivals over n-1 gaps and overstate offered
+    load by ~1/n, skewing every rate sweep low-n point."""
     if not np.isfinite(rate) or rate <= 0:
         raise ValueError(f"arrival rate must be finite and > 0, "
                          f"got {rate}")
@@ -102,8 +111,10 @@ def closed_stream(reqs: Sequence[Request]) -> List[TimedRequest]:
 
 def offered_rate(stream: Sequence[TimedRequest]) -> Optional[float]:
     """Realized arrival rate of a stream: requests per second over the
-    [0, last-arrival] span.  ``None`` when the span is zero (closed
-    stream / single arrival) — offered load is unbounded, not a rate."""
+    [0, last-arrival] span — the same ``arrival_span_s`` denominator
+    ``ChunkedServer.serve_online`` reports, so the two numbers agree
+    by construction.  ``None`` when the span is zero (closed stream /
+    single arrival) — offered load is unbounded, not a rate."""
     if not stream:
         return None
     t_last = max(tr.t_arrival for tr in stream)

@@ -81,7 +81,8 @@ class AuditedChunkedServer(ChunkedServer):
                                   dtype=np.int32)
 
     def _fake_chunk(self, params, cache, cur_tok, out_buf, tokens_host,
-                    pos, n_tokens, is_decode, emit, out_len, block_table):
+                    pos, n_tokens, is_decode, emit, out_len, samp_temp,
+                    samp_top_k, samp_top_p, samp_seed, block_table):
         ct = np.asarray(cur_tok).copy()
         ob = np.asarray(out_buf).copy()
         T = ob.shape[1]
@@ -93,7 +94,8 @@ class AuditedChunkedServer(ChunkedServer):
         return cache, jnp.asarray(ct), jnp.asarray(ob)
 
     def _fake_span(self, params, cache, cur_tok, out_buf, pos, out_len,
-                   active, max_new, block_table):
+                   active, max_new, samp_temp, samp_top_k, samp_top_p,
+                   samp_seed, block_table):
         ct = np.asarray(cur_tok).copy()
         ob = np.asarray(out_buf).copy()
         # operands arrive as device arrays (the server device_puts its
@@ -115,7 +117,8 @@ class AuditedChunkedServer(ChunkedServer):
                 jnp.asarray(pos), jnp.asarray(out_len), jnp.asarray(act))
 
     def _fake_verify(self, params, cache, table, cur_tok, out_buf, pos,
-                     out_len, active, max_new, block_table):
+                     out_len, active, max_new, samp_temp, samp_top_k,
+                     samp_top_p, samp_seed, block_table):
         K1 = self.spec_decode + 1
         ct = np.asarray(cur_tok).copy()
         ob = np.asarray(out_buf).copy()

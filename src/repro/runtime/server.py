@@ -61,6 +61,19 @@ rejected suffix's cache writes are rolled back host-side by
 truncating the slot's block-table frontier.  One extra compiled
 program total: {chunk_step, decode_span, verify_step}.
 
+``sampling=SamplingParams(...)`` (default greedy) sets the server-wide
+stochastic decoding head and each ``Request.sampling`` can override it:
+temperature / top-k / top-p over an fp32 softmax, drawn on device with
+a key folded from ``(per-request seed, emission position)`` — no host
+RNG ever enters a span (models/sampling.py).  Greedy is encoded in the
+operand VALUES (temperature 0), so greedy and sampled requests share
+the same three compiled programs, ``temperature=0``/``top_k=1`` is
+bit-identical to the historical argmax engine, and ``spec_decode=K``
+composes: the verify chain is sampled with the same position keys, so
+speculative sampling is exact-match-given-seed to ``K=0`` sampling
+(the point-mass speculative-sampling rule — see
+runtime/spec_decode.py).
+
 ``kernel=True`` (default off; requires ``paged``) reads the KV pool
 through the fused Pallas block-table kernels of
 kernels/paged_attention.py instead of materializing each slot's
@@ -118,7 +131,8 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.launch.mesh import make_tp_mesh
-from repro.models import api, transformer
+from repro.models import api, sampling, transformer
+from repro.models.sampling import GREEDY, SamplingParams
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.runtime import spec_decode as spec
@@ -141,6 +155,10 @@ class Request:
     # position cap: generation will stop at max_len - in_len tokens
     # instead of max_new (previously a silent short harvest)
     truncated: bool = False
+    # per-request sampling config (models/sampling.SamplingParams);
+    # None falls back to the server's default (greedy unless the
+    # server was built with sampling=...)
+    sampling: Optional[SamplingParams] = None
 
 
 def sharegpt_like_requests(n: int, vocab: int, *, max_input: int = 128,
@@ -208,7 +226,8 @@ def repetitive_requests(n: int, vocab: int, *, num_motifs: int = 2,
 
 def clone_requests(reqs: List[Request]) -> List[Request]:
     """Fresh Request objects for re-serving the same mix (A/B runs)."""
-    return [Request(rid=r.rid, prompt=r.prompt.copy(), max_new=r.max_new)
+    return [Request(rid=r.rid, prompt=r.prompt.copy(), max_new=r.max_new,
+                    sampling=r.sampling)
             for r in reqs]
 
 
@@ -264,6 +283,7 @@ class ChunkedServer:
                  kernel: bool = False, fp8_kv: bool = False,
                  fp8_linear: bool = False,
                  tp: int = 1, mesh=None,
+                 sampling: Optional[SamplingParams] = None,
                  tracer: Optional[Tracer] = None):
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
@@ -273,6 +293,14 @@ class ChunkedServer:
         self.span = span
         self.paged = paged
         self.eos_id = eos_id
+        # -- stochastic sampling (models/sampling): the server default
+        # for requests without their own SamplingParams.  Greedy is a
+        # VALUE (temperature=0), not a program variant: the sample
+        # operands are always present in every work unit's signature,
+        # so greedy<->sampled flips never recompile (JX005) and the
+        # per-slot mirrors below are just four more int32/f32 scheduler
+        # vectors crossing through _put.
+        self.sampling = sampling if sampling is not None else GREEDY
         # -- observability (repro.obs): `self.obs` records lifecycle
         # events only when a Tracer is passed (NULL_TRACER's methods
         # are no-ops and `enabled=False` skips arg construction at the
@@ -404,6 +432,12 @@ class ChunkedServer:
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.mode = ["idle"] * batch_slots    # idle | prefill | decode | done
         self.prompt_off = np.zeros(batch_slots, np.int32)
+        # per-slot sampling mirrors (filled at admission; idle slots
+        # hold greedy values, so they can never draw)
+        self.samp_temp = np.zeros(batch_slots, np.float32)
+        self.samp_top_k = np.zeros(batch_slots, np.int32)
+        self.samp_top_p = np.ones(batch_slots, np.float32)
+        self.samp_seed = np.zeros(batch_slots, np.int32)
         # donate_argnums=(1,): the KV cache (operand 1, after params)
         # is consumed and rebound from the outputs on every dispatch,
         # so donating it lets XLA update the pool in place — without
@@ -411,9 +445,9 @@ class ChunkedServer:
         # reasoning as the COW copy's donate above; repro.analysis
         # rule JX003 gates this statically)
         self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1,),
-                                 **self._sharding_kw(n_ops=9, n_out=2))
+                                 **self._sharding_kw(n_ops=13, n_out=2))
         self._span_fn = jax.jit(self._span_impl, donate_argnums=(1,),
-                                **self._sharding_kw(n_ops=7, n_out=5))
+                                **self._sharding_kw(n_ops=11, n_out=5))
         if self.spec_decode:
             self.ngram_table = spec.init_ngram_table(
                 self.spec_decode, spec_n_ctx)
@@ -422,7 +456,7 @@ class ChunkedServer:
                                                   self._repl)
             self._verify_fn = jax.jit(self._spec_impl,
                                       donate_argnums=(1,),
-                                      **self._sharding_kw(n_ops=8,
+                                      **self._sharding_kw(n_ops=12,
                                                           n_out=7))
             self.spec_steps = 0
             self.spec_slot_steps = 0
@@ -513,7 +547,9 @@ class ChunkedServer:
 
     # -- jitted work units ------------------------------------------------
     def _chunk_impl(self, params, cache, cur_tok, out_buf, tokens_host,
-                    pos, n_tokens, is_decode, emit, out_len, block_table):
+                    pos, n_tokens, is_decode, emit, out_len,
+                    samp_temp, samp_top_k, samp_top_p, samp_seed,
+                    block_table):
         with self._trace_ctx():
             B, C = tokens_host.shape
             col0 = jnp.arange(C, dtype=jnp.int32) == 0
@@ -522,7 +558,13 @@ class ChunkedServer:
             logits, cache = transformer.chunk_step(
                 self.cfg, params, cache, tokens, pos, n_tokens,
                 block_table if self.paged else None, **self._fwd_kw())
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # the emitted token will sit at sequence position
+            # pos + n_tokens — the position key that makes this draw
+            # identical to the span/verify paths' draw for the same
+            # position (models/sampling, greedy when temp<=0)
+            nxt = sampling.sample_tokens(logits, samp_temp, samp_top_k,
+                                         samp_top_p, samp_seed,
+                                         pos + n_tokens)
             cur_tok = jnp.where(emit, nxt, cur_tok)
             row = jnp.arange(B)
             idx = jnp.clip(out_len, 0, out_buf.shape[1] - 1)
@@ -531,13 +573,17 @@ class ChunkedServer:
             return cache, cur_tok, out_buf
 
     def _span_impl(self, params, cache, cur_tok, out_buf, pos, out_len,
-                   active, max_new, block_table):
+                   active, max_new, samp_temp, samp_top_k, samp_top_p,
+                   samp_seed, block_table):
         with self._trace_ctx():
             return self._span_body(params, cache, cur_tok, out_buf, pos,
-                                   out_len, active, max_new, block_table)
+                                   out_len, active, max_new, samp_temp,
+                                   samp_top_k, samp_top_p, samp_seed,
+                                   block_table)
 
     def _span_body(self, params, cache, cur_tok, out_buf, pos, out_len,
-                   active, max_new, block_table):
+                   active, max_new, samp_temp, samp_top_k, samp_top_p,
+                   samp_seed, block_table):
         row = jnp.arange(self.B)
         cap = self.max_len - 1
         bt = block_table if self.paged else None
@@ -547,7 +593,11 @@ class ChunkedServer:
             logits, cache = transformer.decode_step(
                 self.cfg, params, cache, tok, pos, bt,
                 **self._fwd_kw())
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # emission position pos + 1 (pre-increment), matching the
+            # chunk path's pos + n_tokens and verify row j's
+            # pos + 1 + j — same (seed, position) -> same draw
+            nxt = sampling.sample_tokens(logits, samp_temp, samp_top_k,
+                                         samp_top_p, samp_seed, pos + 1)
             idx = jnp.clip(out_len, 0, out_buf.shape[1] - 1)
             out_buf = out_buf.at[row, idx].set(
                 jnp.where(active, nxt, out_buf[row, idx]))
@@ -568,11 +618,13 @@ class ChunkedServer:
         return cache, cur_tok, out_buf, pos, out_len, active
 
     def _spec_impl(self, params, cache, table, cur_tok, out_buf, pos,
-                   out_len, active, max_new, block_table):
+                   out_len, active, max_new, samp_temp, samp_top_k,
+                   samp_top_p, samp_seed, block_table):
         with self._trace_ctx():
             return spec.spec_decode_step(
                 self.cfg, params, cache, table, cur_tok, out_buf, pos,
-                out_len, active, max_new,
+                out_len, active, max_new, samp_temp, samp_top_k,
+                samp_top_p, samp_seed,
                 block_table if self.paged else None,
                 max_len=self.max_len, eos_id=self.eos_id,
                 fwd_kw=self._fwd_kw())
@@ -823,6 +875,14 @@ class ChunkedServer:
                 self.prompt_off[s] = matched
                 self.pos[s] = matched
                 self.out_len[s] = 0
+                # per-slot sampling mirrors: the request's params, or
+                # the server default (greedy unless sampling= was set)
+                sp = req.sampling if req.sampling is not None \
+                    else self.sampling
+                self.samp_temp[s] = sp.temperature
+                self.samp_top_k[s] = sp.top_k
+                self.samp_top_p[s] = sp.top_p
+                self.samp_seed[s] = sp.seed
                 self.metrics.counter("serving.requests.admitted").inc()
                 if self.obs.enabled:
                     self.obs.admit(req.rid, s, matched, req.truncated)
@@ -880,6 +940,10 @@ class ChunkedServer:
             self._put(tokens_host), self._put(self.pos.copy()),
             self._put(n_tokens), self._put(is_decode), self._put(emit),
             self._put(self.out_len.copy()),
+            self._put(self.samp_temp.copy()),
+            self._put(self.samp_top_k.copy()),
+            self._put(self.samp_top_p.copy()),
+            self._put(self.samp_seed.copy()),
             self._put(self._device_block_table()))
         self.cur_tok.block_until_ready()
         # dispatch wall time: host prep + device step, measured AFTER
@@ -962,6 +1026,10 @@ class ChunkedServer:
             self.params, self.cache, self.cur_tok, self.out_buf,
             self._put(self.pos.copy()), self._put(self.out_len.copy()),
             self._put(active), self._put(max_new),
+            self._put(self.samp_temp.copy()),
+            self._put(self.samp_top_k.copy()),
+            self._put(self.samp_top_p.copy()),
+            self._put(self.samp_seed.copy()),
             self._put(self._device_block_table()))
         self.cur_tok.block_until_ready()
         t1 = time.perf_counter()
@@ -1022,7 +1090,12 @@ class ChunkedServer:
             self.params, self.cache, self.ngram_table, self.cur_tok,
             self.out_buf, self._put(self.pos.copy()),
             self._put(self.out_len.copy()), self._put(active),
-            self._put(max_new), self._put(self._device_block_table()))
+            self._put(max_new),
+            self._put(self.samp_temp.copy()),
+            self._put(self.samp_top_k.copy()),
+            self._put(self.samp_top_p.copy()),
+            self._put(self.samp_seed.copy()),
+            self._put(self._device_block_table()))
         self.cur_tok.block_until_ready()
         emit = jax.device_get(emit_d)
         self.pos = np.array(jax.device_get(pos_d), np.int32)

@@ -11,8 +11,33 @@ changing the emitted tokens: a cheap proposer drafts K continuation
 tokens per slot, ONE `verify_step` call (the same fixed program shape
 as a prefill chunk, models/transformer.py) scores all B×(K+1) tokens
 against the cache, and the server accepts the longest draft prefix
-that matches the greedy argmax chain — exact-parity rejection for
-greedy decoding, so ``spec_decode=K`` is bit-identical to ``K=0``.
+that matches the model's own next-token chain — exact-parity rejection
+for greedy decoding, so ``spec_decode=K`` is bit-identical to ``K=0``.
+
+**Speculative sampling.** With per-request sampling on, acceptance is
+the standard speculative-sampling rule (Leviathan et al. 2023 /
+Chen et al. 2023): draft token ``d ~ q`` is accepted with probability
+``min(1, p(d) / q(d))`` where ``p`` is the target distribution and
+``q`` the draft distribution, and on the first rejection the emitted
+token is resampled from the residual ``norm(max(p - q, 0))`` — which
+provably preserves the target distribution ``p`` exactly (sum the
+accept and residual cases: ``q(x) min(1, p(x)/q(x)) +
+(1 - alpha) norm(max(p - q, 0))(x) = p(x)`` with
+``alpha = sum_x min(p(x), q(x))``).  The n-gram drafter is a *point
+mass* ``q = delta_d``, for which the rule collapses to something the
+greedy machinery already implements: accept ``d`` with probability
+``p(d)``, else resample from ``norm(max(p - delta_d, 0))`` — and both
+cases are realized at once by drawing ``x_j ~ p_j`` at every verify
+row (the sample head keyed by ``(seed, position)``) and accepting the
+longest draft prefix with ``draft_j == x_j``.  P(accept) = P(x = d) =
+p(d), and the first mismatching ``x`` is distributed as
+``p`` conditioned on ``x != d`` = ``norm(max(p - delta_d, 0))`` —
+exactly the residual resample.  ``accept_greedy`` therefore does
+double duty: ``preds`` is the argmax chain under greedy and the
+sampled chain under sampling, and because each row's draw is a pure
+function of ``(seed, emission position)``, the emitted chain is
+exact-match-given-seed to the non-speculative sampled span loop (CI
+asserts both this and a K>0-vs-K=0 distribution-level KS test).
 
 Drafting is a **device-resident n-gram suffix table**: one
 ``[n_ctx, K]`` int32 table, shared by every slot, mapping a hash of
@@ -142,6 +167,8 @@ def spec_decode_step(cfg, params, cache, table: jax.Array,
                      cur_tok: jax.Array, out_buf: jax.Array,
                      pos: jax.Array, out_len: jax.Array,
                      active: jax.Array, max_new: jax.Array,
+                     samp_temp: jax.Array, samp_top_k: jax.Array,
+                     samp_top_p: jax.Array, samp_seed: jax.Array,
                      block_table: Optional[jax.Array], *,
                      max_len: int, eos_id: Optional[int],
                      fwd_kw: Optional[dict] = None
@@ -156,9 +183,15 @@ def spec_decode_step(cfg, params, cache, table: jax.Array,
     first emitted ``eos_id`` (the EOS itself is emitted, then the slot
     stops — a slot finishing mid-verify gets its out_len cut at the
     EOS position so harvest/prefix-insertion never see post-EOS
-    tokens).  Emitted tokens are always the model's own argmax chain
-    ``preds[:, :n_emit]`` — drafts only decide how many rows of it are
-    usable — hence bit-parity with the K=0 span loop.
+    tokens).  Emitted tokens are always the model's own next-token
+    chain ``preds[:, :n_emit]`` — the argmax chain for greedy slots,
+    the position-keyed sampled chain for sampled slots
+    (``samp_temp``/``samp_top_k``/``samp_top_p``/``samp_seed``, all
+    ``[B]``, greedy encoded as temp<=0 per models/sampling) — drafts
+    only decide how many rows of it are usable.  Hence bit-parity with
+    the K=0 span loop for greedy slots and exact-match-given-seed for
+    sampled ones (the speculative-sampling argument in the module
+    docstring).
 
     Returns (cache, table, cur_tok', out_buf', pos', out_len',
     active', n_emit) with n_emit zeroed for inactive slots; the host
@@ -174,8 +207,9 @@ def spec_decode_step(cfg, params, cache, table: jax.Array,
 
     drafts = propose(table, cur_tok, out_buf, out_len)        # [B, K]
     window = jnp.concatenate([cur_tok[:, None], drafts], axis=1)
+    sample = (samp_temp, samp_top_k, samp_top_p, samp_seed)
     preds, cache = api.verify_step(cfg, params, cache, window, pos,
-                                   block_table,
+                                   block_table, sample=sample,
                                    **(fwd_kw or {}))          # [B, K+1]
 
     n_acc = accept_greedy(drafts, preds)
@@ -219,8 +253,10 @@ def record_dispatch(metrics, tracer, *, t0: float, t1: float, k: int,
 
     Feeds the ``serving.dispatches.verify`` / ``serving.wall_s.verify``
     instruments the phase breakdown reads, plus the per-dispatch
-    acceptance histogram (``serving.spec.tokens_per_slot`` — mean
-    emitted tokens per active slot, the >1.0 speculative win) and a
+    acceptance histograms (``serving.spec.tokens_per_slot`` — mean
+    emitted tokens per active slot, the >1.0 speculative win — and
+    ``serving.spec.accept_rate`` — accepted / drafted for the
+    dispatch, the distribution-match signal under sampling) and a
     ``verify_dispatch`` trace event carrying the pre-dispatch context
     lengths for the roofline view.
     """
@@ -232,6 +268,9 @@ def record_dispatch(metrics, tracer, *, t0: float, t1: float, k: int,
     if n_active:
         metrics.histogram("serving.spec.tokens_per_slot").record(
             emitted / n_active)
+    if k * n_active:
+        metrics.histogram("serving.spec.accept_rate").record(
+            accepted / (k * n_active))
     if tracer.enabled:
         tracer.span("verify_dispatch", t0, t1, steps=1,
                     n_active=n_active, emitted=emitted,

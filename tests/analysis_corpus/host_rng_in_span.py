@@ -1,0 +1,59 @@
+"""Seeded violations: HOST RNG smuggled into the sampling hot path —
+the failure mode the per-request-seed contract (models/sampling.py)
+forbids.  Sampling must draw from the device-side ``jax.random``
+threefry keyed by ``(seed, emission position)`` *inside* the jitted
+body; reaching for ``np.random`` / stdlib ``random`` instead either
+bakes one draw in at trace time (a constant "sample" repeated every
+step) or forces a host callback round-trip per token.  Never imported
+— parsed (AST001) and traced (JX001) only.
+
+``hot_impl`` -> ``_host_gumbel``
+    AST001 — ``np.random.gumbel`` reachable from a hot-path root.
+
+``hot_impl`` -> ``_host_tiebreak``
+    AST001 — stdlib ``random.random()`` reachable from the same root.
+
+``sampled_step``
+    JX001 — the callback encoding of the same mistake: a
+    ``jax.pure_callback`` wrapping ``np.random`` inside the traced
+    serving step (the only way a per-step host draw can "work").
+"""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+
+
+def _host_gumbel(z):
+    # AST001: the draw happens on the host, outside the program — at
+    # trace time this is one frozen noise vector replayed forever
+    g = np.random.gumbel(size=z.shape)
+    return z + g
+
+
+def _host_tiebreak(z):
+    # AST001: stdlib random is the same bug one import over
+    return z + random.random()
+
+
+def hot_impl(x):
+    z = jnp.sum(x, axis=-1)
+    z = _host_gumbel(z)
+    return _host_tiebreak(z)
+
+
+def _np_draw(z):
+    return (z + np.random.gumbel(size=z.shape)).astype(z.dtype)
+
+
+def sampled_step(x):
+    """JX001: per-step host RNG via a callback in the traced body."""
+    h = checkpoint_name(
+        jnp.cumsum(x.astype(jnp.float32), axis=-1), "xshard_rng")
+    z = h.sum(axis=-1)
+    z = jax.pure_callback(
+        _np_draw, jax.ShapeDtypeStruct(z.shape, z.dtype), z)
+    return checkpoint_name(z, "serving_hot_path")

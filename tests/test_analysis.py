@@ -289,6 +289,59 @@ def test_latency_stamp_transfer_fires_ast001():
     assert len(rep.findings) == 1
 
 
+def test_host_rng_in_span_fires_ast001():
+    # sampling-era twin of the host-transfer rule: np.random / stdlib
+    # random reachable from a hot-path root (one hit each)
+    rep = Report()
+    ast_lint.run(rep, paths=[_corpus("host_rng_in_span.py")],
+                 repo_root=REPO_ROOT,
+                 roots=[("host_rng_in_span", "hot_impl")],
+                 parity_bodies={})
+    assert rep.count("AST001") == 2
+    assert len(rep.findings) == 2
+    calls = sorted(f.detail["call"] for f in rep.findings)
+    assert calls == ["np.random.gumbel() [host RNG]",
+                     "random.random() [host RNG]"]
+
+
+def test_host_rng_callback_in_jitted_body_fires_jx001():
+    # the only encoding that "works" per-step — a pure_callback around
+    # np.random inside the traced body — is exactly what JX001 flags
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "host_rng_corpus", _corpus("host_rng_in_span.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    closed = jax.make_jaxpr(mod.sampled_step)(jnp.zeros((4, 4)))
+    rep = Report()
+    jaxpr_check._check_jaxpr("corpus", "decode_span", closed.jaxpr, {},
+                             rep)
+    assert rep.count("JX001") == 1
+    assert len(rep.findings) == 1
+
+
+def test_device_rng_sample_head_is_clean():
+    # positive control: the real sample head (threefry keyed by
+    # (seed, position), models/sampling) carries no callback primitive
+    # and no host RNG — greedy<->sampled stays inside the contract
+    from repro.models import sampling as sampling_mod
+
+    def head(logits, temp, top_k, top_p, seed, pos):
+        z = _serving_like(logits)
+        toks = sampling_mod.sample_tokens(logits, temp, top_k, top_p,
+                                          seed, pos + 1)
+        return toks + z.astype(jnp.int32)[:, 0]
+
+    closed = jax.make_jaxpr(head)(
+        jnp.zeros((2, 64)), jnp.zeros((2,), jnp.float32),
+        jnp.zeros((2,), jnp.int32), jnp.ones((2,), jnp.float32),
+        jnp.zeros((2,), jnp.int32), jnp.zeros((2,), jnp.int32))
+    rep = Report()
+    jaxpr_check._check_jaxpr("corpus", "decode_span", closed.jaxpr, {},
+                             rep)
+    assert rep.findings == [], [str(f) for f in rep.findings]
+
+
 def test_ast_scan_covers_online_serving_modules():
     """The online-serving observatory modules must fall inside
     AST_SCAN_PACKAGES so the transfer gate scans them by default."""

@@ -55,6 +55,24 @@ def test_poisson_stream_is_deterministic_and_sorted():
     assert [tr.t_arrival for tr in c] != ts
 
 
+def test_poisson_first_arrival_and_offered_rate_convention():
+    """Seeded regression pin of the arrival convention: arrival k at
+    cumsum(gaps)[k], first arrival one FULL gap after the epoch (never
+    t=0), and offered_rate = n / t_last = n / sum(gaps) — n arrivals
+    over exactly the n gaps that produced them."""
+    reqs = _reqs(6)
+    rate, seed = 2.0, 11
+    # reference draw: same generator, same consumption order
+    gaps = np.random.default_rng(seed).exponential(1.0 / rate,
+                                                   size=len(reqs))
+    stream = poisson_stream(reqs, rate=rate, seed=seed)
+    ts = [tr.t_arrival for tr in stream]
+    assert ts == pytest.approx(list(np.cumsum(gaps)))
+    assert gaps[0] > 0 and ts[0] == pytest.approx(gaps[0])
+    assert offered_rate(stream) == pytest.approx(
+        len(reqs) / float(np.sum(gaps)))
+
+
 def test_poisson_stream_mean_gap_tracks_rate():
     reqs = _reqs(500)
     stream = poisson_stream(reqs, rate=10.0, seed=0)
@@ -177,6 +195,30 @@ def test_serve_online_warm_wave_is_transfer_free(setup):
     assert stats["requests"] == len(reqs)
     assert all(r.output for r in run)
     assert dict(srv.compile_counts()) == counts  # O(1) programs held
+
+
+def test_serve_online_sampled_wave_is_transfer_free(setup):
+    """Per-request stochastic sampling rides the SAME compiled
+    programs as greedy (the flip is in operand values, not signatures)
+    and the device-side threefry draw adds no host round-trip: a
+    greedy-warmed server runs a sampled open-loop wave under
+    transfer_guard('disallow') with zero recompiles."""
+    cfg, params = setup
+    reqs = sharegpt_like_requests(4, cfg.vocab_size, max_input=12,
+                                  max_output=6, seed=13)
+    srv = ChunkedServer(cfg, params, **SRV_KW)
+    srv.serve(clone_requests(reqs))             # GREEDY compile warmup
+    counts = dict(srv.compile_counts())
+    run = clone_requests(reqs)
+    for i, r in enumerate(run):
+        r.sampling = api.SamplingParams(temperature=0.8, top_k=20,
+                                        seed=100 + i)
+    with jax.transfer_guard("disallow"):
+        stats = srv.serve_online(poisson_stream(run, rate=500.0,
+                                                seed=2))
+    assert stats["requests"] == len(run)
+    assert all(r.output for r in run)
+    assert dict(srv.compile_counts()) == counts
 
 
 # ----------------------------------------------------------------------
@@ -316,11 +358,15 @@ def test_attainment_and_goodput_accounting():
     tr = _synthetic_trace()
     ok = SLOSpec(ttft_s=0.45, tpot_s=0.15)
     att = attainment(tr, ok)
-    assert att == {"finished": 1, "met": 1, "attainment": 1.0,
+    # rid 1 never finished: excluded from plain attainment but counted
+    # in unfinished and charged as a miss by attainment_strict
+    assert att == {"finished": 1, "met": 1, "unfinished": 1,
+                   "attainment": 1.0, "attainment_strict": 0.5,
                    "ttft_misses": 0, "tpot_misses": 0}
     tight = SLOSpec(ttft_s=0.3, tpot_s=0.05)
     att2 = attainment(tr, tight)
     assert att2["met"] == 0 and att2["attainment"] == 0.0
+    assert att2["attainment_strict"] == 0.0
     assert att2["ttft_misses"] == 1 and att2["tpot_misses"] == 1
     gp = goodput(tr, ok, wall_s=2.0)
     assert gp["good_tokens"] == 10 and gp["goodput_tok_s"] == 5.0
@@ -332,10 +378,21 @@ def test_attainment_and_goodput_accounting():
         goodput(tr, ok, wall_s=0.0)
     rep = slo_report(tr, ok, 2.0)
     assert rep["attainment"] == 1.0 and rep["goodput_tok_s"] == 5.0
+    assert rep["attainment_strict"] == 0.5 and rep["unfinished"] == 1
     assert rep["slo_ttft_s"] == 0.45
-    # nothing finished -> attainment is undefined, not 100%
-    assert math.isnan(attainment(Tracer(clock=FakeClock()),
-                                 ok)["attainment"])
+    # nothing issued at all -> both attainments undefined, not 100%
+    empty = attainment(Tracer(clock=FakeClock()), ok)
+    assert math.isnan(empty["attainment"])
+    assert math.isnan(empty["attainment_strict"])
+    # issued-but-nothing-finished: plain attainment has no verdicts
+    # (NaN) while strict reports the truth — 0% of issued requests met
+    clk = FakeClock()
+    stuck = Tracer(clock=clk)
+    stuck.enqueue(0, 8, 4, t=0.0)
+    drowned = attainment(stuck, ok)
+    assert math.isnan(drowned["attainment"])
+    assert drowned["attainment_strict"] == 0.0
+    assert drowned["unfinished"] == 1 and drowned["finished"] == 0
 
 
 def test_max_sustainable_rate_finds_the_knee():
@@ -346,11 +403,41 @@ def test_max_sustainable_rate_finds_the_knee():
                                target_attainment=0.9)
     assert res["max_sustainable_rps"] == 2.0
     assert [s["rate_rps"] for s in res["sweep"]] == [1.0, 2.0, 4.0]
+    assert [s["attained"] for s in res["sweep"]] == [True, True, False]
     assert res["target_attainment"] == 0.9
     nothing = max_sustainable_rate(lambda r: {"attainment": 0.0}, [1.0])
     assert math.isnan(nothing["max_sustainable_rps"])
     with pytest.raises(ValueError):
         max_sustainable_rate(runner, [])
+
+
+def test_max_sustainable_rate_nan_attainment_is_a_miss():
+    nan = float("nan")
+
+    # all-NaN sweep (server drowned at every rate): NaN knee, every
+    # swept rate still present in the trajectory as an explicit miss
+    res = max_sustainable_rate(lambda r: {"attainment": nan},
+                               [1.0, 2.0, 3.0])
+    assert math.isnan(res["max_sustainable_rps"])
+    assert [s["rate_rps"] for s in res["sweep"]] == [1.0, 2.0, 3.0]
+    assert [s["attained"] for s in res["sweep"]] == [False] * 3
+
+    # NaN in the middle: the drowned rate is a miss, NOT a dropped
+    # row, and a higher attaining rate can still move the knee past it
+    def runner(rate):
+        return {"attainment": nan if rate == 2.0 else 1.0}
+
+    res = max_sustainable_rate(runner, [1.0, 2.0, 3.0])
+    assert res["max_sustainable_rps"] == 3.0
+    assert [s["attained"] for s in res["sweep"]] == [True, False, True]
+
+    # attainment_strict is preferred over plain attainment when both
+    # are present: 2 of 200 finished and met -> NOT sustainable
+    res = max_sustainable_rate(
+        lambda r: {"attainment": 1.0, "attainment_strict": 0.01},
+        [1.0], target_attainment=0.99)
+    assert math.isnan(res["max_sustainable_rps"])
+    assert res["sweep"][0]["attained"] is False
 
 
 # ----------------------------------------------------------------------
@@ -421,6 +508,27 @@ def test_gate_fails_dropped_metric_allows_additions():
     grown["float32"]["new_section"] = {"whatever": 1.0}
     _, failures = compare(_BASE, grown)
     assert failures == []
+
+
+def test_gate_pvalue_floor_and_strict_attainment():
+    base = {"sampling": {"ks_pvalue": 0.9},
+            "online": {"attainment_strict": 1.0, "unfinished": 0}}
+    # p-values have no baseline ratio: a candidate anywhere above the
+    # 0.01 floor passes even if far "below" the baseline draw
+    ok = {"sampling": {"ks_pvalue": 0.02},
+          "online": {"attainment_strict": 0.95, "unfinished": 0}}
+    rows, failures = compare(base, ok, tolerance=0.10)
+    assert failures == []
+    assert any(r["rule"] == "p-value-floor" for r in rows)
+    low = {"sampling": {"ks_pvalue": 0.005},
+           "online": {"attainment_strict": 1.0, "unfinished": 0}}
+    _, failures = compare(base, low)
+    assert [f["rule"] for f in failures] == ["p-value-floor"]
+    # attainment_strict is gated higher-is-better
+    drop = {"sampling": {"ks_pvalue": 0.9},
+            "online": {"attainment_strict": 0.5, "unfinished": 3}}
+    _, failures = compare(base, drop)
+    assert [f["path"][-1] for f in failures] == ["attainment_strict"]
 
 
 def test_gate_skips_nan_and_negative_baselines_compare_sanely():

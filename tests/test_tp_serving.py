@@ -1,9 +1,9 @@
 """Tensor-parallel serving on a forced 8-device CPU mesh (subprocess so
 the main pytest process keeps a single device): tp=2/tp=4 greedy token
 parity with tp=1 on the ShareGPT / sysprompt / repetitive mixes with
-paged KV + prefix cache + spec decode all on, O(1) compile counts, and
-harvest correctness under admission backpressure on a tight sharded
-pool."""
+paged KV + prefix cache + spec decode all on, seeded-sampling bitwise
+parity across the same mesh degrees, O(1) compile counts, and harvest
+correctness under admission backpressure on a tight sharded pool."""
 
 import json
 import os
@@ -64,6 +64,30 @@ for tp in (2, 4):
     for name in mixes:
         results[f"tp{tp}_{name}_identical"] = outs[tp][name] == outs[1][name]
 
+# stochastic sampling determinism across mesh degrees: per-request
+# seeds + same admission order -> the device threefry draw must emit
+# bitwise-identical tokens at every tp.  temperature/top_k are exact
+# (sort, threshold, fold_in, argmax are reduction-order-independent)
+# and the fp32 softmax/cumsum behind top_p measured bitwise stable on
+# the replicated vocab row, so the full config is pinned here.
+samp_outs = {}
+for tp in (1, 2, 4):
+    srv = ChunkedServer(cfg, params, tp=tp, **KW)
+    rs = clone_requests(mixes["sharegpt"])
+    for i, r in enumerate(rs):
+        r.sampling = api.SamplingParams(temperature=0.7, top_k=12,
+                                        top_p=0.9, seed=40 + i)
+    srv.serve(rs)
+    assert all(r.done for r in rs)
+    samp_outs[tp] = [r.output for r in rs]
+    counts = srv.compile_counts()
+    results[f"tp{tp}_sampled_compiles"] = sum(
+        max(v, 0) for v in counts.values())
+for tp in (2, 4):
+    results[f"tp{tp}_sampled_identical"] = samp_outs[tp] == samp_outs[1]
+results["sampled_differs_from_greedy"] = (
+    samp_outs[1] != outs[1]["sharegpt"])
+
 # harvest correctness under backpressure: a sharded pool too small for
 # every slot at once stalls admission but must serve the exact same
 # greedy tokens as the roomy tp=1 reference above
@@ -111,6 +135,16 @@ def test_tp_compile_counts_stay_three(tp_results, tp):
     assert counts["chunk_step"] == 1, counts
     assert counts["verify_step"] == 1, counts
     assert counts["decode_span"] in (0, 1), counts
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_tp_sampled_token_parity(tp_results, tp):
+    """Seeded temperature/top_k/top_p sampling is bitwise deterministic
+    across mesh degrees: same seeds + admission order -> identical
+    sampled tokens at tp=1/2/4, from the same O(1) program set."""
+    assert tp_results[f"tp{tp}_sampled_identical"], tp
+    assert tp_results["sampled_differs_from_greedy"]
+    assert tp_results[f"tp{tp}_sampled_compiles"] <= 3
 
 
 def test_tp_harvest_under_backpressure(tp_results):
